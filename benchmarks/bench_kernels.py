@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode — CPU emulation, NOT a
+TPU timing) vs the pure-jnp XLA reference, plus the analytic FLOP count
+each kernel would issue on the MXU."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.safeguard_filter import pairwise_sqdist
+from repro.kernels.safeguard_filter import ref as sf_ref
+from repro.kernels.robust_agg import coord_median
+from repro.kernels.robust_agg import ref as ra_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import ref as fa_ref
+
+
+def _time(fn, *args, iters=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(out_dir: str = "experiments/bench"):
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    m, d = 16, 65536
+    a = jax.random.normal(key, (m, d), jnp.bfloat16)
+    us_k = _time(lambda x: pairwise_sqdist(x), a)
+    us_r = _time(jax.jit(sf_ref.pairwise_sqdist), a)
+    flops = 2 * m * m * d
+    rows.append({"kernel": "safeguard_filter", "interp_us": us_k,
+                 "ref_us": us_r, "flops": flops})
+    print(f"bench_kernels,safeguard_filter,{us_k:.0f}us(interp),"
+          f"{us_r:.0f}us(ref),{flops:.2e}flops")
+
+    g = jax.random.normal(key, (10, 65536))
+    us_k = _time(lambda x: coord_median(x), g)
+    us_r = _time(jax.jit(ra_ref.coord_median), g)
+    rows.append({"kernel": "robust_agg_median", "interp_us": us_k,
+                 "ref_us": us_r})
+    print(f"bench_kernels,robust_agg_median,{us_k:.0f}us(interp),"
+          f"{us_r:.0f}us(ref)")
+
+    B, H, K, L, D = 1, 4, 2, 512, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, L, D), jnp.bfloat16)
+    k_ = jax.random.normal(ks[1], (B, K, L, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, K, L, D), jnp.bfloat16)
+    us_k = _time(lambda *x: flash_attention(*x, block_q=128, block_k=128),
+                 q, k_, v)
+    us_r = _time(jax.jit(fa_ref.attention), q, k_, v)
+    flops = 4 * B * H * L * L * D // 2      # causal
+    rows.append({"kernel": "flash_attention", "interp_us": us_k,
+                 "ref_us": us_r, "flops": flops})
+    print(f"bench_kernels,flash_attention,{us_k:.0f}us(interp),"
+          f"{us_r:.0f}us(ref),{flops:.2e}flops")
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "kernels.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

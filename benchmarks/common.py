@@ -1,0 +1,97 @@
+"""Shared benchmark scaffolding: the paper's experimental protocol
+(Section 5 / Appendix C) at CPU scale — m = 10 workers, alpha = 0.4,
+teacher-student task replacing ResNet-20/CIFAR (offline substitute,
+DESIGN.md §9)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import SafeguardConfig
+from repro.core import aggregators as agg_lib
+from repro.core import attacks as atk_lib
+from repro.data import tasks
+from repro.optim import make_optimizer
+from repro.train import Trainer, init_train_state, make_train_step
+
+M, N_BYZ = 10, 4
+BYZ = jnp.arange(M) < N_BYZ
+
+ATTACKS = ["variance", "sign_flip", "label_flip", "delayed",
+           "safeguard_x0.6", "safeguard_x0.7"]
+DEFENSES = ["safeguard_single", "safeguard_double", "coord_median",
+            "geo_median", "krum", "zeno", "mean"]
+
+
+def make_defense(name: str, *, t0=20, t1=120, floor=0.1, reset_period=0):
+    if name.startswith("safeguard"):
+        return SafeguardConfig(
+            m=M, T0=t0, T1=t1,
+            mode="single" if name.endswith("single") else "double",
+            threshold_floor=floor, reset_period=reset_period), None
+    return None, agg_lib.make_registry(N_BYZ, M)[name]
+
+
+def run_experiment(task, attack_name: str, defense_name: str, *,
+                   steps: int = 150, lr: float = 0.1, batch: int = 100,
+                   seed: int = 0, reset_period: int = 0,
+                   collect=None) -> Dict:
+    attack = atk_lib.make_registry(delay=32)[attack_name]
+    sg_cfg, aggregator = make_defense(defense_name,
+                                      reset_period=reset_period)
+    opt = make_optimizer(TrainConfig(lr=lr))
+    params = tasks.student_init(task, seed=seed + 1)
+    state = init_train_state(params, opt, sg_cfg=sg_cfg, attack=attack,
+                             seed=seed)
+    step = make_train_step(tasks.mlp_loss, opt, byz_mask=BYZ,
+                           sg_cfg=sg_cfg, aggregator=aggregator,
+                           attack=attack)
+    flip = BYZ if attack.data_attack else None
+    it = tasks.teacher_batches(task, batch, seed=seed, m=M, flip_mask=flip)
+    held = (tasks.teacher_batches(task, 10, seed=seed + 7)
+            if aggregator is not None and aggregator.needs_scores else None)
+    tr = Trainer(state, step, it, held_iter=held, log_every=10 ** 9,
+                 name=f"{attack_name}/{defense_name}")
+    t0_wall = time.time()
+    if collect is None:
+        tr.run(steps, verbose=False)
+    else:
+        for i in range(steps):
+            b = next(tr.data_iter)
+            if held is not None:
+                tr.state, metrics = tr.step_fn(tr.state, b, next(held))
+            else:
+                tr.state, metrics = tr.step_fn(tr.state, b)
+            collect(i, tr.state, metrics)
+    wall = time.time() - t0_wall
+    eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(10_000), 4000)
+    acc = float(tasks.mlp_accuracy(tr.state.params, eval_b))
+    out = {"attack": attack_name, "defense": defense_name, "acc": acc,
+           "steps": steps, "wall_s": round(wall, 2)}
+    if tr.state.sg_state is not None:
+        good = tr.state.sg_state.good
+        out["caught_byz"] = int((BYZ & ~good).sum())
+        out["evicted_honest"] = int((~BYZ & ~good).sum())
+    return out
+
+
+def ideal_accuracy(task, *, steps=150, lr=0.1, batch=60, seed=0) -> float:
+    """SGD on honest workers only — the paper's 'ideal accuracy'."""
+    opt = make_optimizer(TrainConfig(lr=lr))
+    params = tasks.student_init(task, seed=seed + 1)
+    agg = agg_lib.Aggregator("mean", agg_lib.mean)
+    mh = M - N_BYZ
+    state = init_train_state(params, opt)
+    step = make_train_step(tasks.mlp_loss, opt,
+                           byz_mask=jnp.zeros((mh,), bool),
+                           aggregator=agg)
+    it = tasks.teacher_batches(task, batch, seed=seed, m=mh)
+    tr = Trainer(state, step, it, log_every=10 ** 9, name="ideal")
+    tr.run(steps, verbose=False)
+    eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(10_000), 4000)
+    return float(tasks.mlp_accuracy(tr.state.params, eval_b))

@@ -1,0 +1,63 @@
+"""Master-side aggregation overhead: the paper claims O(md) processing,
+negligible vs the backward pass.  Times one jitted aggregation call per
+defense across model sizes d (m = 10)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SafeguardConfig, init_state, safeguard_step
+from repro.core import aggregators as agg_lib
+
+M = 10
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)                              # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6     # us
+
+
+def run(out_dir: str = "experiments/bench"):
+    rows = []
+    for d in (10_000, 100_000, 1_000_000):
+        key = jax.random.PRNGKey(0)
+        grads = {"w": jax.random.normal(key, (M, d))}
+        params = {"w": jnp.zeros((d,))}
+
+        reg = agg_lib.make_registry(n_byz=4, m=M)
+        for name in ("mean", "coord_median", "trimmed_mean", "geo_median",
+                     "krum"):
+            fn = jax.jit(reg[name].fn)
+            us = _time(fn, grads)
+            rows.append({"defense": name, "d": d, "us_per_call": us})
+            print(f"overhead,{name},d={d},{us:.1f}us")
+
+        for variant, kw in (("safeguard_exact", {}),
+                            ("safeguard_sketch", dict(use_sketch=True,
+                                                      sketch_k=1024))):
+            cfg = SafeguardConfig(m=M, T0=50, T1=200, threshold_floor=1.0,
+                                  **kw)
+            st = init_state(cfg, params)
+            fn = jax.jit(lambda s, g: safeguard_step(s, g, cfg))
+            us = _time(fn, st, grads)
+            rows.append({"defense": variant, "d": d, "us_per_call": us})
+            print(f"overhead,{variant},d={d},{us:.1f}us")
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "overhead.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

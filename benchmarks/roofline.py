@@ -1,0 +1,138 @@
+"""Roofline analysis (deliverable g): read the dry-run artifacts and derive
+the three roofline terms per (arch x shape x mesh x variant):
+
+    compute    = FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = collective_bytes_per_device / ICI_link_bandwidth
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+``cost_analysis`` reports the post-partitioning per-device module, so all
+three terms are per-chip seconds directly.
+
+Also reports MODEL_FLOPS (6*N*D train / 2*N*D inference, N = active
+params) against total HLO FLOPs — the useful-compute fraction that
+exposes remat/redundancy waste — and names the dominant term.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+_SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    import repro.configs as C
+    cfg = C.get(arch)
+    n_active = cfg.active_param_count()
+    seq, batch, kind = _SHAPES[shape]
+    if kind == "train":
+        return 6.0 * n_active * seq * batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq * batch
+    return 2.0 * n_active * batch          # one token per sequence
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    n_dev = rec["n_devices"]
+    # prefer loop-aware accounting (XLA's cost_analysis counts while-loop
+    # bodies once; hlo_analysis.py multiplies by trip counts)
+    flops = (rec.get("flops_per_device_loop_aware")
+             or rec["flops_per_device"])
+    hbm = (rec.get("hbm_bytes_per_device_loop_aware")
+           or rec["bytes_per_device"])
+    coll_b = (rec.get("collective_bytes_loop_aware")
+              or rec["collective_bytes"])
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    t_coll = sum(coll_b.values()) / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops * n_dev
+    mem = rec["memory"]
+    live = (mem["argument_bytes"] + mem["temp_bytes"]
+            + mem["output_bytes"] - mem["alias_bytes"])
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "variant")},
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_step_s": max(terms.values()),
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_fraction": mf / hlo_total if hlo_total else 0.0,
+        "live_bytes_per_device": live,
+        "collective_bytes": coll_b,
+    }
+
+
+def load_all(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        a = analyze(rec)
+        if a is not None:
+            out.append(a)
+        else:
+            out.append({**{k: rec.get(k) for k in
+                           ("arch", "shape", "mesh", "variant")},
+                        "skipped": rec.get("reason", "")})
+    return out
+
+
+def markdown_table(rows: List[Dict], mesh: str = "16x16",
+                   variant: str = "exact") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "useful % | live GiB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("variant") != variant:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {100 * r['useful_fraction']:.0f}% | "
+            f"{r['live_bytes_per_device'] / 2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def run(out_dir: str = "experiments/bench"):
+    rows = load_all()
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    ok = [r for r in rows if "skipped" not in r]
+    for r in ok:
+        if r["mesh"] == "16x16" and r["variant"] == "exact":
+            print(f"roofline,{r['arch']},{r['shape']},"
+                  f"{r['dominant']},{r['bound_step_s']:.3e}s,"
+                  f"useful={100 * r['useful_fraction']:.0f}%")
+    print()
+    print(markdown_table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

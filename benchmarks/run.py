@@ -1,0 +1,58 @@
+"""Benchmark driver — one module per paper table/figure plus the roofline
+report.  ``python -m benchmarks.run [--quick]`` prints one CSV line per
+measurement (``name,...``) and writes JSON artifacts under
+``experiments/bench/``.
+
+  table1          Paper Table 1: attack x defense accuracy grid
+  fig2a           Paper Fig 2(a): detection-statistic growth exponents
+  fig2b           Paper Fig 2(b): periodic good-set reset (transients)
+  convex_attack   Appendix C.3: burst attack vs unwindowed filter
+  overhead        master aggregation O(md) cost per defense
+  kernels         Pallas kernels (interpret) vs jnp reference
+  roofline        three-term roofline per (arch x shape) from the dry runs
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps per experiment (~3x faster)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    args = ap.parse_args()
+    steps = 60 if args.quick else 150
+
+    from benchmarks import (table1_attack_grid, fig2_detection, fig2_reset,
+                            convex_attack, overhead, bench_kernels,
+                            roofline)
+    jobs = {
+        "table1": lambda: table1_attack_grid.run(steps=steps),
+        "fig2a": lambda: fig2_detection.run(steps=max(steps, 120)),
+        "fig2b": lambda: fig2_reset.run(steps=steps),
+        "convex_attack": lambda: convex_attack.run(steps=max(steps, 150)),
+        "overhead": overhead.run,
+        "kernels": bench_kernels.run,
+        "roofline": roofline.run,
+    }
+    selected = (args.only.split(",") if args.only else list(jobs))
+    for name in selected:
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        try:
+            jobs[name]()
+        except Exception as e:                          # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"{name},FAILED,{e}")
+            sys.exit(1)
+        print(f"{name},wall_s,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

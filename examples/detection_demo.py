@@ -1,0 +1,61 @@
+"""Paper Figure 2(a) demo: watch the detection statistic separate.
+
+Runs SafeguardSGD against the variance attack [Baruch et al. 2019] with
+eviction disabled, printing ||B_i - B_med|| for one honest and one
+Byzantine worker: honest drifts ~sqrt(t) (martingale concentration),
+Byzantine drifts ~linearly — the separation that historyless defenses
+cannot see.
+
+    PYTHONPATH=src python examples/detection_demo.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import SafeguardConfig, safeguard_step
+from repro.core import attacks as atk_lib
+from repro.data import tasks
+from repro.optim import make_optimizer
+from repro.train import init_train_state
+
+M, N_BYZ = 10, 4
+
+
+def main():
+    task = tasks.make_teacher_task()
+    byz = jnp.arange(M) < N_BYZ
+    attack = atk_lib.make_variance_attack(z_max=1.5)
+    # windows/threshold set huge => statistic observable, nobody evicted
+    sg_cfg = SafeguardConfig(m=M, T0=10 ** 6, T1=10 ** 6,
+                             threshold_floor=10 ** 6)
+    opt = make_optimizer(TrainConfig(lr=0.05))
+    state = init_train_state(tasks.student_init(task), opt, sg_cfg=sg_cfg)
+
+    data = tasks.teacher_batches(task, 100, m=M)
+    vg = jax.value_and_grad(tasks.mlp_loss)
+    astate = None
+    print(f"{'step':>6} {'byzantine':>12} {'honest':>12} {'ratio':>8}")
+    for t in range(201):
+        batch = next(data)
+        _, grads = jax.vmap(lambda wb: vg(state.params, wb))(batch)
+        grads, astate = attack(grads, byz, astate, state.step,
+                               jax.random.PRNGKey(t))
+        sg_state, agg, info = safeguard_step(state.sg_state, grads, sg_cfg)
+        params, opt_state = opt.update(agg, state.opt_state, state.params,
+                                       state.step)
+        state = state.__class__(params=params, opt_state=opt_state,
+                                sg_state=sg_state, attack_state=astate,
+                                step=state.step + 1, rng=state.rng)
+        if t % 25 == 0:
+            d = info["dist_to_med_B"]
+            b, h = float(d[0]), float(d[6])
+            print(f"{t:>6} {b:>12.4f} {h:>12.4f} {b / max(h, 1e-9):>8.1f}x")
+
+    print("\nByzantine drift grows linearly in t; honest drift ~sqrt(t).")
+    print("With realistic windows the safeguard evicts all four attackers")
+    print("(see tests/test_safeguard.py::test_variance_attack_caught...).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Minimal dependency-free pytree checkpointing.
+
+Leaves are flattened to ``path -> array`` and stored in a single ``.npz``
+per step alongside a JSON sidecar carrying the treedef (as path list) and
+user metadata.  Supports any nested dict/list/tuple pytree of jnp/np
+arrays — params, optimizer state, and the safeguard accumulators alike.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_part(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_part(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"#{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return p.name
+    return str(p)
+
+
+def _insert(root, parts, value):
+    head = parts[0]
+    is_idx = head.startswith("#")
+    key = int(head[1:]) if is_idx else head
+    if len(parts) == 1:
+        if is_idx:
+            while len(root) <= key:
+                root.append(None)
+            root[key] = value
+        else:
+            root[key] = value
+        return
+    nxt_is_idx = parts[1].startswith("#")
+    if is_idx:
+        while len(root) <= key:
+            root.append(None)
+        if root[key] is None:
+            root[key] = [] if nxt_is_idx else {}
+        _insert(root[key], parts[1:], value)
+    else:
+        if key not in root:
+            root[key] = [] if nxt_is_idx else {}
+        _insert(root[key], parts[1:], value)
+
+
+def save(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    np.savez(path + ".npz", **flat)
+    meta = {"step": step, "keys": sorted(flat),
+            "metadata": metadata or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    return path + ".npz"
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1))
+             for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None
+            ) -> Tuple[Any, dict]:
+    """Returns (tree, metadata).  Lists/dicts are reconstructed from the
+    stored paths; arrays come back as numpy (cast with tree_map if you
+    need device arrays)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    data = np.load(path + ".npz")
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    root: Dict[str, Any] = {}
+    for key in data.files:
+        _insert(root, key.split("/"), data[key])
+    return root, meta

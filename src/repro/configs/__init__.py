@@ -1,0 +1,56 @@
+"""Assigned-architecture registry.
+
+``get(name)`` -> full ModelConfig;  ``get_smoke(name)`` -> reduced variant.
+``ARCH_IDS`` lists the ten assigned architectures in assignment order.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (   # noqa: F401
+    ModelConfig, InputShape, INPUT_SHAPES, TrainConfig)
+
+ARCH_IDS = [
+    "musicgen-medium",
+    "granite-34b",
+    "deepseek-v2-236b",
+    "granite-moe-3b-a800m",
+    "qwen2-vl-7b",
+    "deepseek-coder-33b",
+    "recurrentgemma-2b",
+    "tinyllama-1.1b",
+    "stablelm-1.6b",
+    "mamba2-130m",
+]
+
+# beyond-assignment variants (DESIGN.md §7)
+EXTRA_IDS = ["tinyllama-1.1b-swa"]
+
+_MODULES = {
+    "musicgen-medium": "musicgen_medium",
+    "granite-34b": "granite_34b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "mamba2-130m": "mamba2_130m",
+    "tinyllama-1.1b-swa": "tinyllama_1_1b_swa",
+}
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _module(name).SMOKE

@@ -1,0 +1,34 @@
+"""deepseek-coder-33b [dense] — llama-arch code model.
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256. [arXiv:2401.14196]
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    arch_type="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=19200,
+    vocab_size=32256,
+    source="arXiv:2401.14196",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-coder-smoke",
+    arch_type="dense",
+    n_layers=2,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab_size=256,
+    source="arXiv:2401.14196",
+)

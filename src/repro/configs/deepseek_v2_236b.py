@@ -1,0 +1,63 @@
+"""deepseek-v2-236b [moe] — MLA attention + fine-grained MoE.
+
+60L d_model=5120 128H, MLA kv_lora=512 (q_lora=1536, qk_nope=128,
+qk_rope=64, v=128), MoE: 2 shared + 160 routed experts, top-6,
+d_expert=1536, first layer dense FFN (12288). vocab=102400.
+[arXiv:2405.04434]
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    arch_type="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=1536,                    # per the assignment row (= expert width)
+    vocab_size=102400,
+    head_dim=192,                 # qk_nope + qk_rope
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    n_experts=160,
+    n_shared_experts=2,
+    top_k=6,
+    d_expert=1536,
+    first_k_dense=1,
+    d_ff_dense=12288,
+    source="arXiv:2405.04434",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-smoke",
+    arch_type="moe",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=64,
+    vocab_size=256,
+    head_dim=48,
+    use_mla=True,
+    q_lora_rank=64,
+    kv_lora_rank=32,
+    qk_nope_dim=32,
+    qk_rope_dim=16,
+    v_head_dim=32,
+    n_experts=4,
+    n_shared_experts=1,
+    top_k=2,
+    d_expert=64,
+    first_k_dense=1,
+    d_ff_dense=256,
+    source="arXiv:2405.04434",
+)

@@ -1,0 +1,40 @@
+"""granite-34b [dense] — code model with MQA.
+
+88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152. [arXiv:2405.04324]
+GELU MLP (d_ff = 4*d, GPTBigCode lineage) — the swiglu variant would put
+the parameter count at 47B instead of the model's 34B.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    arch_type="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp="gelu",
+    norm="layernorm",
+    source="arXiv:2405.04324",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="granite-34b-smoke",
+    arch_type="dense",
+    n_layers=2,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=1,
+    d_ff=512,
+    vocab_size=256,
+    mlp="gelu",
+    norm="layernorm",
+    source="arXiv:2405.04324",
+)

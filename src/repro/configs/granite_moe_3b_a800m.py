@@ -1,0 +1,41 @@
+"""granite-moe-3b-a800m [moe] — llama-arch GQA + 40-expert top-8 MoE.
+
+32L d_model=1536 24H (GQA kv=8) d_ff=512 (expert width) vocab=49155,
+MoE 40e top-8.  [hf:ibm-granite/granite-3.0-1b-a400m-base]
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    arch_type="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    n_experts=40,
+    top_k=8,
+    d_expert=512,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="granite-moe-smoke",
+    arch_type="moe",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=64,
+    vocab_size=256,
+    n_experts=4,
+    top_k=2,
+    d_expert=64,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+)

@@ -1,0 +1,51 @@
+"""mamba2-130m [ssm] — attention-free SSD (state-space duality).
+
+24L d_model=768, d_state=128, expand=2 (d_inner=1536, 24 heads of dim 64),
+depthwise conv 4, vocab=50280.  [arXiv:2405.21060]
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    arch_type="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=True,
+    d_state=128,
+    d_conv=4,
+    expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    n_groups=1,
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke",
+    arch_type="ssm",
+    n_layers=2,
+    d_model=128,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=256,
+    ssm=True,
+    d_state=32,
+    d_conv=4,
+    expand=2,
+    ssm_head_dim=32,
+    ssm_chunk=16,
+    n_groups=1,
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)

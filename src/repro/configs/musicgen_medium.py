@@ -1,0 +1,45 @@
+"""musicgen-medium [audio] — decoder-only transformer over EnCodec tokens.
+
+48L d_model=1536 24H (kv=24, full MHA) d_ff=6144 vocab=2048.
+[arXiv:2306.05284]  The EnCodec frontend is a stub: ``input_specs`` provides
+precomputed frame embeddings (B, L, d); the backbone predicts codec tokens.
+MusicGen uses LayerNorm + GELU and sinusoidal positions.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    norm="layernorm",
+    mlp="gelu",
+    pos="sinusoidal",
+    embed_stub=True,
+    source="arXiv:2306.05284",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-medium-smoke",
+    arch_type="audio",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=512,
+    vocab_size=256,
+    norm="layernorm",
+    mlp="gelu",
+    pos="sinusoidal",
+    embed_stub=True,
+    source="arXiv:2306.05284",
+)

@@ -1,0 +1,45 @@
+"""qwen2-vl-7b [vlm] — language backbone with M-RoPE.
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064. M-RoPE sections
+(temporal/height/width) = (16, 24, 24) half-dims of head_dim 128; dynamic
+resolution handled by the (stubbed) ViT frontend — ``input_specs`` provides
+merged patch+text embeddings (B, L, d) and 3-axis position ids (3, B, L).
+[arXiv:2409.12191]
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    arch_type="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    pos="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1e6,
+    embed_stub=True,
+    source="arXiv:2409.12191",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-vl-smoke",
+    arch_type="vlm",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab_size=256,
+    pos="mrope",
+    mrope_sections=(4, 6, 6),
+    embed_stub=True,
+    source="arXiv:2409.12191",
+)

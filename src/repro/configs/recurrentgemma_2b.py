@@ -1,0 +1,49 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention, 1:2 ratio.
+
+26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000, lru_width=2560,
+local-attention window 2048, pattern (rec, rec, attn) — layer i is
+attention iff i % 3 == 2.  GeGLU MLP.  [arXiv:2402.19427]
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    arch_type="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,
+    d_ff=7680,
+    vocab_size=256000,
+    head_dim=256,
+    mlp="geglu",
+    attn="sliding",
+    window=2048,
+    hybrid=True,
+    lru_width=2560,
+    tie_embeddings=True,
+    source="arXiv:2402.19427",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-smoke",
+    arch_type="hybrid",
+    n_layers=3,                    # one full (rec, rec, attn) pattern
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=256,
+    vocab_size=256,
+    head_dim=32,
+    mlp="geglu",
+    attn="sliding",
+    window=32,
+    hybrid=True,
+    lru_width=128,
+    source="arXiv:2402.19427",
+)

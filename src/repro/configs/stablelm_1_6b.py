@@ -1,0 +1,39 @@
+"""stablelm-1.6b [dense] — MHA with partial rotary embeddings.
+
+24L d_model=2048 32H (kv=32, full MHA) d_ff=5632 vocab=100352,
+rotary fraction 0.25, LayerNorm.  [hf:stabilityai/stablelm-2-1_6b]
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    arch_type="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=5632,
+    vocab_size=100352,
+    norm="layernorm",
+    rope_fraction=0.25,
+    source="hf:stabilityai/stablelm-2-1_6b",
+    dtype=jnp.bfloat16,
+    param_dtype=jnp.bfloat16,
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-smoke",
+    arch_type="dense",
+    n_layers=2,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=384,
+    vocab_size=256,
+    norm="layernorm",
+    rope_fraction=0.25,
+    source="hf:stabilityai/stablelm-2-1_6b",
+)

@@ -1,0 +1,16 @@
+"""tinyllama-1.1b-swa — sliding-window variant (beyond assignment).
+
+Same architecture as tinyllama-1.1b with a 4096-token attention window so
+the dense family can run the ``long_500k`` decode shape sub-quadratically
+(DESIGN.md §7).
+"""
+
+import dataclasses
+
+from repro.configs.tinyllama_1_1b import CONFIG as _BASE, SMOKE as _SMOKE
+
+CONFIG = dataclasses.replace(
+    _BASE, name="tinyllama-1.1b-swa", attn="sliding", window=4096)
+
+SMOKE = dataclasses.replace(
+    _SMOKE, name="tinyllama-swa-smoke", attn="sliding", window=32)

@@ -1,0 +1,9 @@
+"""Core library: SafeguardSGD (the paper's contribution), baseline robust
+aggregators, and the Byzantine attack suite."""
+
+from repro.core.safeguard import (    # noqa: F401
+    SafeguardConfig, SafeguardState, init_state, safeguard_step)
+from repro.core import aggregators    # noqa: F401
+from repro.core import attacks        # noqa: F401
+from repro.core import tree_utils     # noqa: F401
+from repro.core import sketch         # noqa: F401

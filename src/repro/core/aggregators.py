@@ -1,0 +1,138 @@
+"""Baseline robust aggregators the paper compares against (Section 5 /
+Appendix C.1): naive mean, coordinate-wise median, trimmed mean, geometric
+median (both the paper's medoid form and Weiszfeld), Krum, and Zeno.
+
+All aggregators are *historyless*: they map the ``m`` gradients of the
+current step to one aggregate and know nothing about previous steps — the
+property the variance attack [Baruch et al. 2019] exploits and the
+safeguard's windowed accumulators fix.
+
+Interface: stacked pytree (leaves ``(m, ...)``) -> parameter pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_utils as tu
+
+
+def mean(grads):
+    """Naive mean — no Byzantine tolerance at all."""
+    return jax.tree.map(lambda g: g.mean(axis=0), grads)
+
+
+def coordinate_median(grads):
+    """Definition C.2 — per-coordinate median over workers."""
+    def one(g):
+        return jnp.median(g.astype(jnp.float32), axis=0).astype(g.dtype)
+    return jax.tree.map(one, grads)
+
+
+def trimmed_mean(grads, trim: int):
+    """Drop the ``trim`` lowest and highest values per coordinate, then mean
+    (Yin et al. 2018)."""
+    def one(g):
+        m = g.shape[0]
+        if 2 * trim >= m:
+            raise ValueError(f"trim {trim} too large for m={m}")
+        s = jnp.sort(g.astype(jnp.float32), axis=0)
+        kept = s[trim:m - trim]
+        return kept.mean(axis=0).astype(g.dtype)
+    return jax.tree.map(one, grads)
+
+
+def geometric_medoid(grads):
+    """Paper Definition C.1 as implemented in their experiments: the set
+    element minimizing the summed distance to all others."""
+    sqdist = tu.tree_pairwise_sqdist(grads)
+    scores = jnp.sqrt(sqdist).sum(axis=1)
+    return tu.tree_select_worker(grads, jnp.argmin(scores))
+
+
+def geometric_median(grads, iters: int = 8, eps: float = 1e-8):
+    """True geometric median via Weiszfeld iterations (smoothed)."""
+    m = tu.tree_worker_count(grads)
+    y = mean(grads)
+
+    def body(y, _):
+        # distances ||g_i - y||
+        def dist_sq_leaf(g, c):
+            d = (g.astype(jnp.float32) - c.astype(jnp.float32)[None])
+            return (d * d).reshape(m, -1).sum(axis=1)
+        parts = jax.tree.map(dist_sq_leaf, grads, y)
+        dist = jnp.sqrt(sum(jax.tree_util.tree_leaves(parts)) + eps)
+        w = 1.0 / dist
+        w = w / w.sum()
+        y_new = jax.tree.map(
+            lambda g: jnp.tensordot(w, g.astype(jnp.float32), axes=1
+                                    ).astype(g.dtype), grads)
+        return y_new, None
+
+    y, _ = jax.lax.scan(body, y, None, length=iters)
+    return y
+
+
+def krum(grads, n_byz: int):
+    """Definition C.3 — select the worker whose m - b - 2 nearest
+    neighbours are closest in squared distance."""
+    m = tu.tree_worker_count(grads)
+    k = m - n_byz - 2
+    if k < 1:
+        raise ValueError(f"Krum needs m > b + 2 (m={m}, b={n_byz})")
+    sqdist = tu.tree_pairwise_sqdist(grads)
+    sqdist = sqdist.at[jnp.arange(m), jnp.arange(m)].set(jnp.inf)
+    nearest = jnp.sort(sqdist, axis=1)[:, :k]
+    scores = nearest.sum(axis=1)
+    return tu.tree_select_worker(grads, jnp.argmin(scores))
+
+
+def zeno(grads, scores: jax.Array, n_byz: int):
+    """Definition C.4 — mean of the ``m - b`` gradients with the highest
+    *stochastic descendant scores* (computed by the caller: Zeno needs a
+    master-side loss oracle, see ``train.trainer.zeno_scores``)."""
+    m = tu.tree_worker_count(grads)
+    keep = m - n_byz
+    order = jnp.argsort(-scores)              # descending
+    mask = jnp.zeros((m,), bool).at[order[:keep]].set(True)
+    return tu.tree_masked_mean(grads, mask)
+
+
+def zeno_score(loss_before: jax.Array, loss_after: jax.Array,
+               grad_sq_norm: jax.Array, rho: float = 5e-4) -> jax.Array:
+    """Score(u) = f_r(x) - f_r(x - eta u) - rho ||u||^2 (eta folded in by
+    the caller evaluating ``loss_after`` at ``x - eta u``)."""
+    return loss_before - loss_after - rho * grad_sq_norm
+
+
+# --------------------------------------------------------------------------
+# Registry used by the trainer / benchmarks
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    name: str
+    fn: Callable                 # (grads, **ctx) -> aggregate
+    needs_scores: bool = False   # Zeno
+    historyless: bool = True
+
+
+def make_registry(n_byz: int, m: int):
+    """Aggregators parameterized the way the paper runs them (b = alpha*m)."""
+    trim = min(n_byz, (m - 1) // 2)
+    return {
+        "mean": Aggregator("mean", mean),
+        "coord_median": Aggregator("coord_median", coordinate_median),
+        "trimmed_mean": Aggregator(
+            "trimmed_mean", functools.partial(trimmed_mean, trim=trim)),
+        "geo_median": Aggregator("geo_median", geometric_medoid),
+        "weiszfeld": Aggregator("weiszfeld", geometric_median),
+        "krum": Aggregator("krum", functools.partial(krum, n_byz=n_byz)),
+        "zeno": Aggregator(
+            "zeno", functools.partial(zeno, n_byz=n_byz), needs_scores=True),
+    }

@@ -1,0 +1,194 @@
+"""Byzantine attack library (paper Section 5 + Appendix C).
+
+An attack is a pure function transforming the stacked honest per-worker
+gradients into what the master actually receives:
+
+    attack(grads, byz_mask, state, step, rng) -> (grads', state')
+
+``byz_mask`` is a static (m,) bool array marking Byzantine workers; honest
+rows are passed through untouched.  Attacks may collude: they see the full
+honest stack (the strongest, paper-consistent threat model — Remark 2.2
+allows byzantine vectors to depend on everything up to the current step).
+
+Attacks implemented:
+  * ``none``              — honest execution;
+  * ``sign_flip``         — send the negated gradient;
+  * ``scaled_flip``       — send ``-scale * g`` (the paper's *safeguard
+    attack*, scale 0.6 / 0.7, an inner-product-manipulation instance);
+  * ``delayed``           — send the gradient from ``D`` steps ago
+    (implemented with a circular buffer of the honest mean gradient);
+  * ``variance``          — [Baruch et al. 2019] collusive attack: every
+    Byzantine worker reports ``mu - z * sigma`` per coordinate, the largest
+    mean shift statistically indistinguishable within one step;
+  * ``ipm``               — inner-product manipulation [Xie et al. 2020]:
+    report ``-eps * mean(honest)``;
+  * ``burst``             — Appendix C.3 attack on the convex algorithm of
+    Alistarh et al. 2018: behave honestly except for a contiguous window of
+    steps in which the gradient is scaled by ``-burst_scale``;
+  * ``random_noise``      — i.i.d. Gaussian junk (sanity baseline).
+
+Label-flipping is a *data* attack, implemented in ``repro.data`` (the
+Byzantine worker computes a true gradient of a corrupted loss).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_utils as tu
+
+
+def _mix(honest, adversarial, byz_mask):
+    """Per-worker select: byzantine rows from ``adversarial``."""
+    def one(h, a):
+        mshape = (-1,) + (1,) * (h.ndim - 1)
+        return jnp.where(byz_mask.reshape(mshape), a.astype(h.dtype), h)
+    return jax.tree.map(one, honest, adversarial)
+
+
+def _honest_stats(grads, byz_mask):
+    """Mean and std over honest workers only, per coordinate."""
+    w = (~byz_mask).astype(jnp.float32)
+    n = jnp.maximum(w.sum(), 1.0)
+
+    def stats(g):
+        gw = g.astype(jnp.float32)
+        wshape = (-1,) + (1,) * (g.ndim - 1)
+        mu = (gw * w.reshape(wshape)).sum(axis=0) / n
+        var = (((gw - mu[None]) ** 2) * w.reshape(wshape)).sum(axis=0) / n
+        return mu, jnp.sqrt(var + 1e-12)
+    mus, sigmas = {}, {}
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    out = [stats(l) for l in leaves]
+    mu_tree = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    sd_tree = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return mu_tree, sd_tree
+
+
+# --------------------------------------------------------------------------
+
+def attack_none(grads, byz_mask, state, step, rng):
+    return grads, state
+
+
+def attack_sign_flip(grads, byz_mask, state, step, rng):
+    neg = jax.tree.map(jnp.negative, grads)
+    return _mix(grads, neg, byz_mask), state
+
+
+def make_scaled_flip(scale: float):
+    """Safeguard attack: ``-scale * g`` — tuned to stay under the filter
+    thresholds (scale 0.6) or to occasionally trigger them (0.7)."""
+    def attack(grads, byz_mask, state, step, rng):
+        neg = jax.tree.map(lambda g: -scale * g, grads)
+        return _mix(grads, neg, byz_mask), state
+    return attack
+
+
+def make_variance_attack(z_max: float = 0.3, direction: float = -1.0):
+    """[Baruch et al.] all Byzantine workers collude on ``mu + dir*z*sigma``."""
+    def attack(grads, byz_mask, state, step, rng):
+        mu, sd = _honest_stats(grads, byz_mask)
+        adv = jax.tree.map(
+            lambda m_, s_: (m_ + direction * z_max * s_)[None], mu, sd)
+        adv = jax.tree.map(
+            lambda a, g: jnp.broadcast_to(a, g.shape), adv, grads)
+        return _mix(grads, adv, byz_mask), state
+    return attack
+
+
+def make_ipm(eps: float = 1.0):
+    """Inner-product manipulation: report ``-eps * honest mean``."""
+    def attack(grads, byz_mask, state, step, rng):
+        mu, _ = _honest_stats(grads, byz_mask)
+        adv = jax.tree.map(
+            lambda m_, g: jnp.broadcast_to((-eps * m_)[None], g.shape),
+            mu, grads)
+        return _mix(grads, adv, byz_mask), state
+    return attack
+
+
+def make_delayed(delay: int):
+    """Send the honest-mean gradient from ``delay`` steps ago.  State is a
+    circular buffer of honest means (kept small: the benchmark models)."""
+    def init(grads_like):
+        return {
+            "buffer": jax.tree.map(
+                lambda l: jnp.zeros((delay,) + l.shape, jnp.float32),
+                grads_like),
+        }
+
+    def attack(grads, byz_mask, state, step, rng):
+        mu, _ = _honest_stats(grads, byz_mask)
+        slot = step % delay
+        old = jax.tree.map(lambda b: b[slot], state["buffer"])
+        # before the buffer fills, replay the earliest honest mean we have
+        ready = step >= delay
+        adv_single = jax.tree.map(
+            lambda o, m_: jnp.where(ready, o, m_.astype(jnp.float32)), old, mu)
+        adv = jax.tree.map(
+            lambda a, g: jnp.broadcast_to(a[None], g.shape), adv_single, grads)
+        new_buf = jax.tree.map(
+            lambda b, m_: b.at[slot].set(m_.astype(jnp.float32)),
+            state["buffer"], mu)
+        return _mix(grads, adv, byz_mask), {"buffer": new_buf}
+
+    attack.init = init
+    return attack
+
+
+def make_burst(start: int, length: int, burst_scale: float = 5.0):
+    """Appendix C.3: honest until ``start``, then ``-burst_scale * g`` for
+    ``length`` steps, then honest again.  Circumvents *unwindowed* (whole
+    -history) concentration filters; caught by the paper's sliding windows."""
+    def attack(grads, byz_mask, state, step, rng):
+        active = (step >= start) & (step < start + length)
+        adv = jax.tree.map(lambda g: -burst_scale * g, grads)
+        mixed = _mix(grads, adv, byz_mask)
+        out = jax.tree.map(
+            lambda h, x: jnp.where(active, x, h), grads, mixed)
+        return out, state
+    return attack
+
+
+def make_random_noise(sigma: float = 1.0):
+    def attack(grads, byz_mask, state, step, rng):
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        keys = jax.random.split(rng, len(leaves))
+        noise = [sigma * jax.random.normal(k, l.shape, jnp.float32)
+                 for k, l in zip(keys, leaves)]
+        adv = jax.tree_util.tree_unflatten(treedef, noise)
+        return _mix(grads, adv, byz_mask), state
+    return attack
+
+
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    name: str
+    fn: Callable
+    init: Optional[Callable] = None   # state initializer (grads_like) -> state
+    data_attack: bool = False         # label flipping lives in the pipeline
+
+
+def make_registry(delay: int = 64, burst_start: int = 200,
+                  burst_length: int = 50) -> Dict[str, Attack]:
+    delayed = make_delayed(delay)
+    return {
+        "none": Attack("none", attack_none),
+        "sign_flip": Attack("sign_flip", attack_sign_flip),
+        "safeguard_x0.6": Attack("safeguard_x0.6", make_scaled_flip(0.6)),
+        "safeguard_x0.7": Attack("safeguard_x0.7", make_scaled_flip(0.7)),
+        "variance": Attack("variance", make_variance_attack(0.3)),
+        "ipm": Attack("ipm", make_ipm(1.0)),
+        "delayed": Attack("delayed", delayed, init=delayed.init),
+        "burst": Attack("burst",
+                        make_burst(burst_start, burst_length, 5.0)),
+        "random_noise": Attack("random_noise", make_random_noise(1.0)),
+        "label_flip": Attack("label_flip", attack_none, data_attack=True),
+    }

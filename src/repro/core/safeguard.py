@@ -1,0 +1,314 @@
+"""SafeguardSGD (Allen-Zhu, Ebrahimian, Li, Alistarh — ICLR 2021).
+
+Implements the paper's Algorithm 1 (double safe guard) and Algorithm 2
+(single safe guard) as a pure-JAX aggregation layer:
+
+  * per-worker accumulators ``A_i`` (long window ``T1``) and ``B_i`` (short
+    window ``T0``) of the reported gradients, each divided by the number of
+    currently-good workers, reset at every multiple of the window length;
+  * a *concentration median* ``A_med``: either the paper's theoretical rule
+    (any good worker whose accumulator is within threshold of a strict
+    majority) or the empirical rule of Appendix C.1 (argmin over workers of
+    the ``ceil(m/2 + 1)``-th smallest pairwise distance, with an automatic
+    threshold ``scale * max(score, floor)``);
+  * permanent eviction of any worker farther than the threshold from the
+    median — within the current window; an optional periodic *full reset*
+    (Section 5) restores evicted workers every ``reset_period`` steps,
+    which tolerates transient failures and bounded ID relabeling;
+  * the SGD direction: mean of the reported gradients over currently-good
+    workers, optionally plus the isotropic Gaussian perturbation
+    ``xi ~ N(0, nu^2 I)`` used by the theory to escape saddle points.
+
+Two state representations are provided:
+
+  * **exact** (paper-faithful): the accumulators are full stacked gradient
+    pytrees, ``O(m * d)`` state; pairwise distances via the Gram matrix
+    (``core.tree_utils.tree_gram``) which shards cleanly;
+  * **sketched** (beyond paper, DESIGN.md §3): accumulate CountSketch
+    projections, ``O(m * r * k)`` state, identical filter decisions up to
+    JL distortion.
+
+Everything is ``jit``-safe: masks instead of dynamic shapes, ``where``
+instead of branches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_utils as tu
+from repro.core import sketch as sk
+
+
+# --------------------------------------------------------------------------
+# Config
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SafeguardConfig:
+    """Hyper-parameters of the safeguard filter.
+
+    ``mode``:
+      * ``"double"`` — Algorithm 1 (windows ``T0 <= T1``, thresholds
+        ``thresh0 <= thresh1``);
+      * ``"single"`` — Algorithm 2 (only the ``B``/short guard is active).
+    ``rule``:
+      * ``"empirical"`` — Appendix C.1 scoring + auto threshold;
+      * ``"theoretical"`` — fixed thresholds ``thresh0/1 = Theta(sqrt(T))``,
+        majority-ball median, eviction at ``2 * thresh``.
+    """
+    m: int                      # number of workers
+    T0: int = 100               # short window length (steps)
+    T1: int = 600               # long window length (steps)
+    mode: str = "double"        # "double" | "single"
+    rule: str = "empirical"     # "empirical" | "theoretical"
+    # theoretical rule: fixed thresholds (paper: 8 * sqrt(T log(16mT/p)))
+    thresh0: float = 0.0
+    thresh1: float = 0.0
+    # empirical rule (Appendix C.1)
+    threshold_scale: float = 1.5
+    threshold_floor: float = 5.0
+    # Gaussian perturbation xi ~ N(0, nu^2 I); nu = 0 disables (paper C.1)
+    nu: float = 0.0
+    # Section 5: restore all workers every ``reset_period`` steps (0 = never)
+    reset_period: int = 0
+    # aggregate over the pre-filter good set (paper Alg 1 line 12 uses
+    # good_t, i.e. eviction takes effect next step)
+    aggregate_prefilter: bool = True
+    # sketched safeguard (beyond paper)
+    use_sketch: bool = False
+    sketch_k: int = 2048
+    sketch_reps: int = 4
+    sketch_seed: int = 0
+    # dtype for exact accumulators
+    acc_dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if self.mode not in ("double", "single"):
+            raise ValueError(f"bad mode {self.mode!r}")
+        if self.rule not in ("empirical", "theoretical"):
+            raise ValueError(f"bad rule {self.rule!r}")
+        if self.T0 > self.T1:
+            raise ValueError("need T0 <= T1")
+        if self.rule == "theoretical" and self.thresh0 <= 0:
+            raise ValueError("theoretical rule needs explicit thresholds")
+
+    @staticmethod
+    def theoretical_thresholds(T0: int, T1: int, m: int, p: float = 0.01,
+                               V: float = 1.0):
+        """Paper Lemma 3.2 / B.2 thresholds ``8 sqrt(T log(16 m T / p))``.
+
+        ``V`` rescales for gradient-noise bound != 1 (the paper normalizes
+        V = 1; thresholds are proportional to V).
+        """
+        import math
+        t0 = 8.0 * V * math.sqrt(T0 * math.log(16 * m * T1 / p)) / m
+        t1 = 8.0 * V * math.sqrt(T1 * math.log(16 * m * T1 / p)) / m
+        return t0, t1
+
+
+# --------------------------------------------------------------------------
+# State
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SafeguardState:
+    """Carried across steps. ``A``/``B`` are stacked pytrees in exact mode,
+    ``(m, r*k)`` sketch matrices in sketched mode."""
+    good: jax.Array             # (m,) bool — currently-good mask
+    step: jax.Array             # () int32
+    A: Any                      # long-window accumulator (None in single mode)
+    B: Any                      # short-window accumulator
+    evicted_at: jax.Array       # (m,) int32, -1 if never evicted (diagnostic)
+
+
+def init_state(cfg: SafeguardConfig, grads_like) -> SafeguardState:
+    """``grads_like``: a parameter pytree (NOT stacked) used for shapes."""
+    if cfg.use_sketch:
+        acc = jnp.zeros((cfg.m, cfg.sketch_reps * cfg.sketch_k), jnp.float32)
+        A = acc if cfg.mode == "double" else None
+        B = acc
+    else:
+        def stacked(leaf):
+            return jnp.zeros((cfg.m,) + leaf.shape, cfg.acc_dtype)
+        acc = jax.tree.map(stacked, grads_like)
+        A = acc if cfg.mode == "double" else None
+        B = jax.tree.map(stacked, grads_like)
+    return SafeguardState(
+        good=jnp.ones((cfg.m,), bool),
+        step=jnp.zeros((), jnp.int32),
+        A=A,
+        B=B,
+        evicted_at=-jnp.ones((cfg.m,), jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Filter internals
+# --------------------------------------------------------------------------
+
+def _empirical_filter(sqdist: jax.Array, good: jax.Array, m: int,
+                      scale: float, floor: float):
+    """Appendix C.1: score_i = ceil(m/2+1)-th smallest distance over good j;
+    med = argmin score;  evict j with d(j, med) >= scale * max(S, floor).
+
+    Returns (pass mask, med index, threshold, scores).
+    """
+    big = jnp.float32(1e30)
+    dist = jnp.sqrt(sqdist)
+    # mask non-good rows/cols
+    dist = jnp.where(good[None, :], dist, big)
+    dist = jnp.where(good[:, None], dist, big)
+    k = int(-(-m // 2)) + 1        # ceil(m/2) + 1 entries -> index k-1
+    k = min(k, m)
+    sorted_d = jnp.sort(dist, axis=1)
+    scores = sorted_d[:, k - 1]
+    scores = jnp.where(good, scores, big)
+    med = jnp.argmin(scores)
+    S = scores[med]
+    thresh = scale * jnp.maximum(S, floor)
+    ok = dist[:, med] < thresh
+    ok = ok | (jnp.arange(m) == med)
+    return ok & good, med, thresh, scores
+
+
+def _theoretical_filter(sqdist: jax.Array, good: jax.Array, m: int,
+                        thresh: float):
+    """Paper Algorithm 1 lines 9-11: med = any good i with a strict majority
+    of workers within ``thresh``;  evict at ``2 * thresh``."""
+    big = jnp.float32(1e30)
+    dist = jnp.sqrt(sqdist)
+    dist = jnp.where(good[None, :], dist, big)
+    dist = jnp.where(good[:, None], dist, big)
+    within = (dist <= thresh) & good[None, :] & good[:, None]
+    counts = within.sum(axis=1)
+    valid = good & (counts > m // 2)
+    # fall back to max-count worker when the majority event fails
+    counts_masked = jnp.where(good, counts, -1)
+    med = jnp.where(valid.any(), jnp.argmax(valid), jnp.argmax(counts_masked))
+    ok = dist[:, med] <= 2.0 * thresh
+    ok = ok | (jnp.arange(m) == med)
+    return ok & good, med, jnp.float32(2.0 * thresh), counts.astype(jnp.float32)
+
+
+def _accumulate_exact(acc, grads, reset, inv_ngood, dtype):
+    """acc <- [reset ? 0 : acc] + grads / n_good, in acc dtype."""
+    def one(a, g):
+        a = jnp.where(reset, jnp.zeros_like(a), a)
+        return a + g.astype(dtype) * inv_ngood
+    return jax.tree.map(one, acc, grads)
+
+
+# --------------------------------------------------------------------------
+# The step
+# --------------------------------------------------------------------------
+
+def safeguard_step(state: SafeguardState, grads, cfg: SafeguardConfig,
+                   rng: Optional[jax.Array] = None):
+    """One master-side safeguard step.
+
+    Args:
+      state:  SafeguardState.
+      grads:  stacked per-worker gradient pytree, leaves ``(m, ...)``.  The
+        Byzantine simulation (attacks) has already been applied.
+      cfg:    SafeguardConfig.
+      rng:    PRNG key for the Gaussian perturbation (required if nu > 0).
+
+    Returns:
+      (new_state, aggregated gradient pytree, info dict)
+    """
+    m = cfg.m
+    t = state.step
+    good = state.good
+
+    # Section 5 relaxation: periodically restore every worker.
+    if cfg.reset_period > 0:
+        restore = (t % cfg.reset_period) == 0
+        good = jnp.where(restore, jnp.ones_like(good), good)
+
+    n_good = jnp.maximum(good.sum(), 1).astype(jnp.float32)
+    inv_ngood = 1.0 / n_good
+
+    reset_B = (t % cfg.T0) == 0
+    reset_A = (t % cfg.T1) == 0
+
+    if cfg.use_sketch:
+        gsk = sk.sketch_tree(grads, k=cfg.sketch_k, reps=cfg.sketch_reps,
+                             seed=cfg.sketch_seed)
+        B = jnp.where(reset_B, 0.0, state.B) + gsk * inv_ngood
+        A = None
+        if cfg.mode == "double":
+            A = jnp.where(reset_A, 0.0, state.A) + gsk * inv_ngood
+        sqdist_B = sk.sketch_pairwise_sqdist(B)
+        sqdist_A = sk.sketch_pairwise_sqdist(A) if A is not None else None
+    else:
+        B = _accumulate_exact(state.B, grads, reset_B, inv_ngood,
+                              cfg.acc_dtype)
+        A = None
+        if cfg.mode == "double":
+            A = _accumulate_exact(state.A, grads, reset_A, inv_ngood,
+                                  cfg.acc_dtype)
+        sqdist_B = tu.tree_pairwise_sqdist(B)
+        sqdist_A = tu.tree_pairwise_sqdist(A) if A is not None else None
+
+    if cfg.rule == "empirical":
+        okB, medB, thB, scoresB = _empirical_filter(
+            sqdist_B, good, m, cfg.threshold_scale, cfg.threshold_floor)
+        if cfg.mode == "double":
+            okA, medA, thA, _ = _empirical_filter(
+                sqdist_A, good, m, cfg.threshold_scale, cfg.threshold_floor)
+        else:
+            okA, medA, thA = jnp.ones_like(okB), medB, thB
+    else:
+        okB, medB, thB, scoresB = _theoretical_filter(
+            sqdist_B, good, m, cfg.thresh0)
+        if cfg.mode == "double":
+            okA, medA, thA, _ = _theoretical_filter(
+                sqdist_A, good, m, cfg.thresh1)
+        else:
+            okA, medA, thA = jnp.ones_like(okB), medB, thB
+
+    new_good = good & okA & okB
+
+    newly_evicted = good & ~new_good
+    evicted_at = jnp.where(newly_evicted, t, state.evicted_at)
+
+    # SGD direction over good_t (pre-filter, paper line 12) or good_{t+1}.
+    agg_mask = good if cfg.aggregate_prefilter else new_good
+    agg = tu.tree_masked_mean(grads, agg_mask)
+
+    if cfg.nu > 0.0:
+        if rng is None:
+            raise ValueError("nu > 0 requires an rng key")
+        keys = jax.random.split(rng, len(jax.tree_util.tree_leaves(agg)))
+        keys = iter(list(keys))
+
+        def add_noise(leaf):
+            k = next(keys)
+            return leaf + cfg.nu * jax.random.normal(k, leaf.shape, leaf.dtype)
+        agg = jax.tree.map(add_noise, agg)
+
+    new_state = SafeguardState(
+        good=new_good,
+        step=t + 1,
+        A=A if cfg.mode == "double" else state.A,
+        B=B,
+        evicted_at=evicted_at,
+    )
+    info = {
+        "n_good": n_good,
+        "med_B": medB,
+        "med_A": medA,
+        "threshold_B": thB,
+        "threshold_A": thA,
+        "dist_to_med_B": jnp.sqrt(sqdist_B)[:, medB],
+        "scores_B": scoresB,
+        "newly_evicted": newly_evicted,
+        "good": new_good,
+    }
+    return new_state, agg, info

@@ -1,0 +1,92 @@
+"""CountSketch (sparse Johnson-Lindenstrauss) projection of gradients.
+
+Beyond-paper optimization ("sketched safeguard", DESIGN.md §3): the paper's
+filter only consumes *pairwise distances* between per-worker gradient
+accumulators.  A CountSketch ``S: R^d -> R^k`` preserves inner products in
+expectation with variance ``O(||x||^2 ||y||^2 / k)``; concatenating ``r``
+independent sketches scaled by ``1/sqrt(r)`` reduces the variance by ``r``.
+Accumulating sketches instead of full gradients drops the safeguard state
+from ``O(m * d)`` to ``O(m * r * k)`` and removes the large accumulate /
+Gram traffic entirely.
+
+The hash functions are multiply-mod hashes over the flat coordinate index,
+seeded per (leaf, repetition) so the projection is a fixed deterministic
+linear map — exactly what the JL argument requires.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Large odd multipliers for the multiply-mod hash family.
+_PRIMES = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
+           0x165667B1, 0xD3A2646D, 0xFD7046C5, 0xB55A4F09)
+
+
+def _hash_idx(n: int, seed: int, rep: int, k: int):
+    """Bucket index and sign for each of ``n`` flat coordinates."""
+    i = jax.lax.iota(jnp.uint32, n)
+    a = jnp.uint32(_PRIMES[rep % len(_PRIMES)])
+    b = jnp.uint32((seed * 2654435761 + rep * 40503 + 12345) % (1 << 32))
+    h = i * a + b
+    # high bits are better mixed than low bits for multiply-mod hashes
+    bucket = ((h >> jnp.uint32(8)) % jnp.uint32(k)).astype(jnp.int32)
+    sign = jnp.where((h >> jnp.uint32(7)) & jnp.uint32(1), 1.0, -1.0)
+    return bucket, sign.astype(jnp.float32)
+
+
+def _linear_index(shape) -> "jax.Array":
+    """Row-major linear index of every element of ``shape`` (uint32),
+    built from broadcasted iotas — elementwise, so it inherits whatever
+    sharding the leaf has (a flattening reshape would gather the leaf)."""
+    idx = jnp.zeros(shape, jnp.uint32)
+    stride = 1
+    for axis in reversed(range(len(shape))):
+        idx = idx + jax.lax.broadcasted_iota(
+            jnp.uint32, shape, axis) * jnp.uint32(stride)
+        stride *= shape[axis]
+    return idx
+
+
+def _hash_of(idx, seed: int, rep: int, k: int):
+    a = jnp.uint32(_PRIMES[rep % len(_PRIMES)])
+    b = jnp.uint32((seed * 2654435761 + rep * 40503 + 12345) % (1 << 32))
+    h = idx * a + b
+    bucket = ((h >> jnp.uint32(8)) % jnp.uint32(k)).astype(jnp.int32)
+    sign = jnp.where((h >> jnp.uint32(7)) & jnp.uint32(1), 1.0, -1.0)
+    return bucket, sign.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "reps", "seed"))
+def sketch_tree(tree, *, k: int = 2048, reps: int = 4, seed: int = 0):
+    """Project a stacked pytree ``(m, ...)`` to sketches ``(m, reps * k)``.
+
+    Implemented as an elementwise hash + multi-dim scatter-add per leaf —
+    never a ``reshape(m, -1)``, which would destroy the model-axis
+    sharding of large leaves and all-gather them (measured: 7.3 TiB/device
+    on deepseek-v2; see EXPERIMENTS.md §Perf)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    out = jnp.zeros((m, reps * k), dtype=jnp.float32)
+    for li, leaf in enumerate(leaves):
+        body = leaf.shape[1:] if leaf.ndim > 1 else (1,)
+        lf = leaf.astype(jnp.float32).reshape((m,) + body) \
+            if leaf.ndim == 1 else leaf.astype(jnp.float32)
+        idx = _linear_index(body)
+        for r in range(reps):
+            bucket, sign = _hash_of(idx, seed * 1000003 + li, r, k)
+            signed = lf * sign[None]
+            # scatter-add over all body axes into k buckets, per worker
+            out = out.at[:, r * k:(r + 1) * k].add(
+                jnp.zeros((m, k), jnp.float32).at[:, bucket].add(signed))
+    return out / jnp.sqrt(jnp.float32(reps))
+
+
+def sketch_pairwise_sqdist(sketches: jax.Array) -> jax.Array:
+    """Pairwise squared distances between sketch rows ``(m, rk)``."""
+    gram = sketches @ sketches.T
+    diag = jnp.diagonal(gram)
+    return jnp.maximum(diag[:, None] + diag[None, :] - 2.0 * gram, 0.0)

@@ -1,0 +1,161 @@
+"""Pytree utilities for stacked per-worker gradients.
+
+Throughout the core library, per-worker gradients are represented as a
+"stacked pytree": a pytree with the same structure as the model parameters
+whose every leaf carries a leading worker axis ``m``.  All pairwise geometry
+(the safeguard filter, Krum, the geometric median) is derived from the
+``m x m`` Gram matrix, which is computed leaf-by-leaf so that nothing of
+size ``O(m * d)`` is ever materialized on a single device: under a sharded
+``jit``, each leaf contributes a *partial* Gram from its local shard and XLA
+inserts a tiny ``(m, m)`` all-reduce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_worker_count(tree) -> int:
+    """Leading-axis size shared by every leaf of a stacked pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        raise ValueError("empty pytree")
+    m = leaves[0].shape[0]
+    for leaf in leaves:
+        if leaf.shape[0] != m:
+            raise ValueError(
+                f"inconsistent worker axis: {leaf.shape[0]} vs {m}")
+    return m
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, c):
+    return jax.tree.map(lambda x: x * c, tree)
+
+
+def tree_where_reset(tree, reset: jax.Array):
+    """Zero every leaf when ``reset`` (scalar bool) is set."""
+    return jax.tree.map(lambda x: jnp.where(reset, jnp.zeros_like(x), x), tree)
+
+
+def tree_gram(tree, *, stream_min: int = 8) -> jax.Array:
+    """``(m, m)`` Gram matrix  G[i, j] = <g_i, g_j>  of a stacked pytree.
+
+    Computed leaf-wise with a multi-contracting-dim ``dot_general`` (NOT a
+    reshape-to-matrix, which would break the sharding of the model axes).
+    The cross-worker products still require combining all workers' values
+    of each coordinate; under a (worker -> data)-sharded jit XLA realizes
+    this as an all-gather of the worker axis — O(m * d_local) live bytes
+    if done at once.  For stacked-layer leaves (ndim >= 3 with a
+    layer-stack axis of length >= ``stream_min``) we therefore *stream*
+    the contraction with a ``lax.scan`` over the stack axis: peak memory
+    drops to O(m * d_local / n_layers) while total FLOPs/collective bytes
+    are unchanged (EXPERIMENTS.md §Perf, deepseek-v2 hillclimb).
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    gram = jnp.zeros((m, m), dtype=jnp.float32)
+    for leaf in leaves:
+        lf = leaf.astype(jnp.float32)
+        if lf.ndim == 1:                       # scalar-per-worker leaf
+            lf = lf[:, None]
+        if lf.ndim >= 3 and lf.shape[1] >= stream_min:
+            sl = jnp.moveaxis(lf, 1, 0)        # (stack, m, ...)
+            contract = tuple(range(1, lf.ndim - 1))
+
+            def gstep(acc, chunk):
+                acc = acc + jax.lax.dot_general(
+                    chunk, chunk, ((contract, contract), ((), ())),
+                    preferred_element_type=jnp.float32)
+                return acc, None
+
+            part, _ = jax.lax.scan(gstep, jnp.zeros((m, m), jnp.float32),
+                                   sl)
+            gram = gram + part
+        else:
+            contract = tuple(range(1, lf.ndim))
+            gram = gram + jax.lax.dot_general(
+                lf, lf, ((contract, contract), ((), ())),
+                preferred_element_type=jnp.float32)
+    return gram
+
+
+def tree_dot(a, b) -> jax.Array:
+    """Scalar <a, b> over full (non-stacked) pytrees.
+
+    Elementwise multiply + full reduction — NOT ``vdot``, whose flattening
+    reshape breaks the sharding of multi-axis leaves and forces XLA to
+    gather the full tensor (hundreds of GB for MoE expert grads).
+    """
+    parts = jax.tree.map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)),
+        a, b)
+    return jnp.asarray(sum(jax.tree_util.tree_leaves(parts)))
+
+
+def tree_sq_norm(tree) -> jax.Array:
+    return tree_dot(tree, tree)
+
+
+def gram_to_sqdist(gram: jax.Array) -> jax.Array:
+    """Pairwise squared distances from a Gram matrix, clipped at 0."""
+    diag = jnp.diagonal(gram)
+    sq = diag[:, None] + diag[None, :] - 2.0 * gram
+    return jnp.maximum(sq, 0.0)
+
+
+def tree_pairwise_sqdist(tree) -> jax.Array:
+    """``(m, m)`` pairwise squared L2 distances between workers."""
+    return gram_to_sqdist(tree_gram(tree))
+
+
+def tree_masked_mean(tree, mask: jax.Array):
+    """Mean over workers ``i`` with ``mask[i]``; mask is float/bool (m,)."""
+    w = mask.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+
+    def one(leaf):
+        wshape = (-1,) + (1,) * (leaf.ndim - 1)
+        s = (leaf.astype(jnp.float32) * w.reshape(wshape)).sum(axis=0)
+        return (s / denom).astype(leaf.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def tree_stack_flatten(tree):
+    """Stacked pytree -> dense ``(m, d)`` matrix (small models only)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    return jnp.concatenate([l.reshape(m, -1) for l in leaves], axis=1)
+
+
+def tree_unflatten_like(flat_row: jax.Array, like):
+    """Inverse of :func:`tree_stack_flatten` for a single row (d,)."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        size = leaf.size
+        out.append(flat_row[off:off + size].reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_select_worker(tree, idx):
+    """Pick worker ``idx`` (traced scalar ok) out of a stacked pytree."""
+    return jax.tree.map(lambda l: jnp.take(l, idx, axis=0), tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

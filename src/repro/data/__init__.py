@@ -1,0 +1,4 @@
+from repro.data.pipeline import (   # noqa: F401
+    lm_batches, stub_batches, worker_split, flip_labels)
+from repro.data.tasks import (      # noqa: F401
+    TeacherTask, make_teacher_task, teacher_batches)

@@ -1,0 +1,96 @@
+"""Synthetic data pipelines.
+
+Real corpora are unavailable offline, so the pipeline produces seeded
+synthetic streams with the structure the training loop expects:
+
+  * ``lm_batches``   — token streams for LM training; tokens are drawn from
+    a Zipf-like unigram distribution with a deterministic per-(step,
+    worker) seed, so every honest worker sees i.i.d. data from the same
+    distribution (the paper's Assumption 2.1);
+  * ``stub_batches`` — (embeddings, labels) streams for the stub-frontend
+    archs (VLM / audio);
+  * ``worker_split`` — reshape a global batch into per-worker slices
+    (worker axis first, for the safeguard's vmap);
+  * ``flip_labels``  — the paper's label-flipping data attack
+    (label l -> n_classes - 1 - l on Byzantine workers' shards).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def worker_split(batch, m: int):
+    """Split leaves (B, ...) -> (m, B/m, ...)."""
+    def one(x):
+        B = x.shape[0]
+        if B % m:
+            raise ValueError(f"batch {B} not divisible by m={m}")
+        return x.reshape((m, B // m) + x.shape[1:])
+    return jax.tree.map(one, batch)
+
+
+def flip_labels(labels, n_classes: int):
+    """Paper Section 5: label l becomes n_classes - 1 - l."""
+    return n_classes - 1 - labels
+
+
+def _zipf_logits(vocab: int, alpha: float = 1.1):
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    return jnp.asarray(np.log(p / p.sum()), jnp.float32)
+
+
+def lm_batches(vocab: int, batch: int, seq_len: int, *, seed: int = 0,
+               m: Optional[int] = None, flip_mask=None,
+               alpha: float = 1.1) -> Iterator[dict]:
+    """Infinite iterator of {"tokens": (B, L)} (or (m, B/m, L) when ``m``).
+
+    ``flip_mask`` (m,) marks workers whose *labels* are corrupted; for LM
+    training the label is the next token, so flipping remaps the worker's
+    token stream through the label-flip involution.
+    """
+    logits = _zipf_logits(vocab, alpha)
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        toks = jax.random.categorical(key, logits, shape=(batch, seq_len))
+        out = {"tokens": toks.astype(jnp.int32)}
+        if m is not None:
+            out = worker_split(out, m)
+            if flip_mask is not None:
+                flipped = flip_labels(out["tokens"], vocab)
+                sel = flip_mask.reshape((m,) + (1,) * (toks.ndim))
+                out = {"tokens": jnp.where(sel, flipped, out["tokens"])}
+        step += 1
+        yield out
+
+
+def stub_batches(d_model: int, vocab: int, batch: int, seq_len: int, *,
+                 seed: int = 0, m: Optional[int] = None,
+                 flip_mask=None) -> Iterator[dict]:
+    """Infinite iterator of {"embeds": (B, L, d), "labels": (B, L)} for
+    stub-frontend archs (frame/patch embeddings are synthetic)."""
+    logits = _zipf_logits(vocab)
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0x5A17), step)
+        k1, k2 = jax.random.split(key)
+        emb = 0.1 * jax.random.normal(k1, (batch, seq_len, d_model),
+                                      jnp.float32)
+        lab = jax.random.categorical(k2, logits, shape=(batch, seq_len)
+                                     ).astype(jnp.int32)
+        out = {"embeds": emb, "labels": lab}
+        if m is not None:
+            out = worker_split(out, m)
+            if flip_mask is not None:
+                flipped = flip_labels(out["labels"], vocab)
+                sel = flip_mask.reshape((m, 1, 1))
+                out = {"embeds": out["embeds"],
+                       "labels": jnp.where(sel, flipped, out["labels"])}
+        step += 1
+        yield out

@@ -1,0 +1,94 @@
+"""Teacher-student classification task for the attack-grid benchmarks.
+
+The paper's experimental protocol (ResNet-20 on CIFAR) needs a real
+dataset; offline we substitute a *non-convex, learnable* task with a known
+optimum: inputs x ~ N(0, I_d), labels from a fixed randomly-initialized
+teacher MLP.  The student is a same-shape MLP trained with cross-entropy —
+non-convex, saddle-rich, and the test accuracy of honest SGD gives the
+"ideal accuracy" reference the paper reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TeacherTask:
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    teacher: dict
+    seed: int
+
+
+def _mlp_init(key, d_in, d_hidden, n_classes, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": scale * jax.random.normal(k1, (d_in, d_hidden), f32)
+        / jnp.sqrt(d_in),
+        "b1": jnp.zeros((d_hidden,), f32),
+        "w2": scale * jax.random.normal(k2, (d_hidden, n_classes), f32)
+        / jnp.sqrt(d_hidden),
+        "b2": jnp.zeros((n_classes,), f32),
+    }
+
+
+def mlp_apply(params, x):
+    h = jnp.tanh(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, batch):
+    logits = mlp_apply(params, batch["x"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return (lse - gold).mean()
+
+
+def mlp_accuracy(params, batch):
+    logits = mlp_apply(params, batch["x"])
+    return (logits.argmax(-1) == batch["y"]).mean()
+
+
+def make_teacher_task(d_in: int = 32, d_hidden: int = 64,
+                      n_classes: int = 10, seed: int = 0) -> TeacherTask:
+    teacher = _mlp_init(jax.random.PRNGKey(seed ^ 0x7EAC), d_in, d_hidden,
+                        n_classes, scale=2.0)
+    return TeacherTask(d_in, d_hidden, n_classes, teacher, seed)
+
+
+def student_init(task: TeacherTask, seed: int = 1):
+    return _mlp_init(jax.random.PRNGKey(seed), task.d_in, task.d_hidden,
+                     task.n_classes)
+
+
+def teacher_batch(task: TeacherTask, key, batch: int):
+    kx, = jax.random.split(key, 1)
+    x = jax.random.normal(kx, (batch, task.d_in), f32)
+    y = mlp_apply(task.teacher, x).argmax(-1).astype(jnp.int32)
+    return {"x": x, "y": y}
+
+
+def teacher_batches(task: TeacherTask, batch: int, *, seed: int = 0,
+                    m: Optional[int] = None,
+                    flip_mask=None) -> Iterator[dict]:
+    from repro.data.pipeline import worker_split, flip_labels
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0xDA7A), step)
+        out = teacher_batch(task, key, batch)
+        if m is not None:
+            out = worker_split(out, m)
+            if flip_mask is not None:
+                flipped = flip_labels(out["y"], task.n_classes)
+                sel = flip_mask.reshape((m, 1))
+                out = {"x": out["x"], "y": jnp.where(sel, flipped, out["y"])}
+        step += 1
+        yield out

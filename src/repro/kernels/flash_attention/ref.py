@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal (sliding-window, GQA) attention."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, window: int = 0):
+    """q: (B, H, L, D); k, v: (B, K, L, D); causal; optional window.
+    Returns (B, H, L, D) in q's dtype; softmax in f32."""
+    B, H, L, D = q.shape
+    K = k.shape[1]
+    qg = q.reshape(B, K, H // K, L, D)
+    s = jnp.einsum("bkgld,bksd->bkgls", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    qpos = jnp.arange(L)[:, None]
+    kpos = jnp.arange(L)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgls,bksd->bkgld", p, v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o.reshape(B, H, L, D)

@@ -1,0 +1,2 @@
+from repro.kernels.robust_agg.ops import coord_median, trimmed_mean  # noqa: F401
+from repro.kernels.robust_agg import ref                             # noqa: F401

@@ -1,0 +1,44 @@
+"""Jit-able wrappers: pad the coordinate axis to a lane multiple (padding
+columns are reduced too but sliced away — values are irrelevant)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.robust_agg.kernel import sorted_reduce_kernel
+
+
+def _pad_cols(g, bd):
+    d = g.shape[1]
+    pad = (-d) % bd
+    if pad:
+        g = jnp.pad(g, ((0, 0), (0, pad)))
+    return g, d
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def coord_median(g, *, block_d: int = 1024, interpret: bool = True):
+    """(m, d) -> (d,) f32 coordinate-wise median."""
+    bd = min(block_d, max(128, g.shape[1]))
+    bd -= bd % 128 or 0
+    bd = max(bd, 128)
+    gp, d = _pad_cols(g, bd)
+    return sorted_reduce_kernel(gp, median=True, block_d=bd,
+                                interpret=interpret)[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("trim", "block_d", "interpret"))
+def trimmed_mean(g, *, trim: int, block_d: int = 1024,
+                 interpret: bool = True):
+    """(m, d) -> (d,) f32 trimmed mean (drop ``trim`` low/high)."""
+    if 2 * trim >= g.shape[0]:
+        raise ValueError(f"trim {trim} too large for m={g.shape[0]}")
+    bd = min(block_d, max(128, g.shape[1]))
+    bd -= bd % 128 or 0
+    bd = max(bd, 128)
+    gp, d = _pad_cols(g, bd)
+    return sorted_reduce_kernel(gp, trim=trim, block_d=bd,
+                                interpret=interpret)[:d]

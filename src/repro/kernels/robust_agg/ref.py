@@ -1,0 +1,15 @@
+"""Pure-jnp oracles for the robust aggregation kernels."""
+
+import jax.numpy as jnp
+
+
+def coord_median(g):
+    """(m, d) -> (d,) per-coordinate median, f32."""
+    return jnp.median(g.astype(jnp.float32), axis=0)
+
+
+def trimmed_mean(g, trim: int):
+    """(m, d) -> (d,): drop ``trim`` smallest/largest per coord, mean."""
+    m = g.shape[0]
+    s = jnp.sort(g.astype(jnp.float32), axis=0)
+    return s[trim:m - trim].mean(axis=0)

@@ -1,0 +1,2 @@
+from repro.kernels.safeguard_filter.ops import pairwise_sqdist  # noqa: F401
+from repro.kernels.safeguard_filter import ref                  # noqa: F401

@@ -1,0 +1,63 @@
+"""Pallas kernel: blocked Gram / pairwise-distance matrix of per-worker
+gradient accumulators.
+
+The safeguard filter needs all pairwise distances between m worker
+accumulators of dimension d (d = model size, up to tens of billions).
+Distances reduce to the Gram matrix, which is a rank-d update streamed
+through VMEM:
+
+    grid over d-tiles; each step loads an (m, bd) tile of the stacked
+    accumulator (HBM -> VMEM), issues one (m x bd) @ (bd x m)^T MXU
+    matmul, and accumulates into an f32 (m, m) VMEM scratch; the final
+    step expands the diagonal to emit squared distances.
+
+m is padded to the sublane multiple by ``ops.py``; ``block_d`` is a
+multiple of the 128-wide lane dimension so each tile is MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(a_ref, out_ref, acc_ref, *, nd: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)                 # (m, bd)
+    acc_ref[...] += jax.lax.dot_general(
+        a, a, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (m, m)
+
+    @pl.when(i == nd - 1)
+    def _finish():
+        g = acc_ref[...]
+        diag = jnp.diagonal(g)
+        sq = diag[:, None] + diag[None, :] - 2.0 * g
+        out_ref[...] = jnp.maximum(sq, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_sqdist_kernel(a, *, block_d: int = 512,
+                           interpret: bool = True):
+    """a: (m, d) with d divisible by block_d.  Returns (m, m) f32."""
+    m, d = a.shape
+    assert d % block_d == 0, (d, block_d)
+    nd = d // block_d
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, nd=nd),
+        grid=(nd,),
+        in_specs=[pl.BlockSpec((m, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m, m), jnp.float32)],
+        interpret=interpret,
+    )(a)

@@ -1,0 +1,25 @@
+"""Jit-able wrapper for the safeguard pairwise-distance kernel: handles
+ragged d (zero-pad to a lane multiple — zeros do not change distances) and
+worker counts that are not sublane-aligned."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.safeguard_filter.kernel import pairwise_sqdist_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_sqdist(a, *, block_d: int = 512, interpret: bool = True):
+    """a: (m, d) any dtype -> (m, m) f32 squared distances."""
+    m, d = a.shape
+    pad_m = (-m) % 8                     # TPU sublane multiple
+    bd = min(block_d, max(128, 128 * ((d + 127) // 128)))
+    pad_d = (-d) % bd
+    if pad_m or pad_d:
+        a = jnp.pad(a, ((0, pad_m), (0, pad_d)))
+    out = pairwise_sqdist_kernel(a, block_d=bd, interpret=interpret)
+    return out[:m, :m]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the safeguard pairwise-distance kernel."""
+
+import jax.numpy as jnp
+
+
+def gram(a):
+    """(m, d) -> (m, m) float32 Gram matrix."""
+    af = a.astype(jnp.float32)
+    return af @ af.T
+
+
+def pairwise_sqdist(a):
+    """(m, d) -> (m, m) float32 squared L2 distances, clipped at 0."""
+    g = gram(a)
+    diag = jnp.diagonal(g)
+    return jnp.maximum(diag[:, None] + diag[None, :] - 2.0 * g, 0.0)

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, sharding rules, dry-run driver and the
+train/serve entry points."""

@@ -1,0 +1,132 @@
+"""Training driver.
+
+Runs a real (CPU-feasible) Byzantine training experiment on the reduced
+configs: pick an architecture, an attack, a defense, and go.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --steps 200 --attack sign_flip --defense safeguard \
+        --workers 10 --byz 4
+
+For the at-scale (256/512-chip) lowering of the same step, use
+``repro.launch.dryrun`` — this driver is the runnable end-to-end path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.configs.base import TrainConfig
+from repro.core import aggregators as agg_lib
+from repro.core import attacks as atk_lib
+from repro.core.safeguard import SafeguardConfig
+from repro.data import pipeline as data_lib
+from repro.models import transformer as T
+from repro.optim import make_optimizer
+from repro.train import Trainer, init_train_state, make_train_step
+from repro import checkpoint as ckpt_lib
+
+
+def build_defense(name: str, m: int, n_byz: int, args):
+    if name in ("safeguard", "safeguard_single"):
+        sg_cfg = SafeguardConfig(
+            m=m, T0=args.t0, T1=args.t1,
+            mode="single" if name.endswith("single") else "double",
+            threshold_floor=args.floor, reset_period=args.reset_period,
+            use_sketch=args.sketch)
+        return sg_cfg, None
+    reg = agg_lib.make_registry(n_byz, m)
+    if name not in reg:
+        raise SystemExit(f"unknown defense {name}; "
+                         f"choose safeguard|safeguard_single|{sorted(reg)}")
+    return None, reg[name]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (default: reduced smoke config)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=80)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=10)
+    ap.add_argument("--byz", type=int, default=4)
+    ap.add_argument("--attack", default="sign_flip",
+                    choices=sorted(atk_lib.make_registry()))
+    ap.add_argument("--defense", default="safeguard")
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--momentum", type=float, default=0.0)
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adam"])
+    ap.add_argument("--t0", type=int, default=50)
+    ap.add_argument("--t1", type=int, default=200)
+    ap.add_argument("--floor", type=float, default=1.0)
+    ap.add_argument("--reset-period", type=int, default=0)
+    ap.add_argument("--sketch", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out", default=None, help="write history JSON here")
+    args = ap.parse_args()
+
+    cfg = C.get(args.arch) if args.full else C.get_smoke(args.arch)
+    m, n_byz = args.workers, args.byz
+    if args.batch % m:
+        raise SystemExit("--batch must be divisible by --workers")
+    byz_mask = jnp.arange(m) < n_byz
+
+    attacks = atk_lib.make_registry()
+    attack = attacks[args.attack]
+    sg_cfg, aggregator = build_defense(args.defense, m, n_byz, args)
+
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = make_optimizer(TrainConfig(lr=args.lr, momentum=args.momentum,
+                                     optimizer=args.optimizer))
+    loss = lambda p, b: T.loss_fn(p, cfg, b)
+    state = init_train_state(params, opt, sg_cfg=sg_cfg, attack=attack,
+                             seed=args.seed)
+    step = make_train_step(loss, opt, byz_mask=byz_mask, sg_cfg=sg_cfg,
+                           aggregator=aggregator, attack=attack)
+
+    flip = byz_mask if attack.data_attack else None
+    if cfg.embed_stub:
+        it = data_lib.stub_batches(cfg.d_model, cfg.vocab_size, args.batch,
+                                   args.seq, seed=args.seed, m=m,
+                                   flip_mask=flip)
+    else:
+        it = data_lib.lm_batches(cfg.vocab_size, args.batch, args.seq,
+                                 seed=args.seed, m=m, flip_mask=flip)
+    held = None
+    if aggregator is not None and aggregator.needs_scores:
+        if cfg.embed_stub:
+            held = data_lib.stub_batches(cfg.d_model, cfg.vocab_size,
+                                         8, args.seq, seed=args.seed + 1)
+        else:
+            held = data_lib.lm_batches(cfg.vocab_size, 8, args.seq,
+                                       seed=args.seed + 1)
+
+    name = f"{cfg.name}/{args.attack}/{args.defense}"
+    trainer = Trainer(state, step, it, held_iter=held,
+                      log_every=args.log_every, name=name)
+    hist = trainer.run(args.steps)
+
+    if args.ckpt_dir:
+        ckpt_lib.save(args.ckpt_dir, int(trainer.state.step),
+                      {"params": trainer.state.params},
+                      metadata={"arch": cfg.name, "attack": args.attack,
+                                "defense": args.defense})
+        print(f"checkpoint written to {args.ckpt_dir}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"config": vars(args), "history": hist}, f, indent=1)
+        print(f"history written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

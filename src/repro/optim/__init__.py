@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (   # noqa: F401
+    OptimizerBundle, make_optimizer, global_norm, clip_by_global_norm)
+from repro.optim.schedules import make_schedule   # noqa: F401

@@ -1,0 +1,109 @@
+"""Optimizers: SGD (+momentum, the paper's choice) and Adam.
+
+Implemented as (init, update) pairs over parameter pytrees; ``update``
+consumes the *aggregated* gradient produced by the safeguard (or by a
+baseline aggregator) — the optimizer is deliberately decoupled from the
+Byzantine layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.schedules import make_schedule
+
+f32 = jnp.float32
+
+
+def global_norm(tree) -> jax.Array:
+    # elementwise square + reduce (vdot's flattening reshape would break
+    # multi-axis sharding and gather the full tensor)
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(f32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(f32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerBundle:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]
+    """update(grads, opt_state, params, step) -> (new_params, new_state)"""
+
+
+def make_optimizer(cfg: TrainConfig) -> OptimizerBundle:
+    lr_fn = make_schedule(cfg)
+
+    if cfg.optimizer == "sgd":
+        def init(params):
+            if cfg.momentum > 0.0:
+                return {"mu": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, f32), params)}
+            return {}
+
+        def update(grads, state, params, step):
+            if cfg.grad_clip > 0.0:
+                grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+            lr = lr_fn(step)
+            if cfg.momentum > 0.0:
+                mu = jax.tree.map(
+                    lambda m, g: cfg.momentum * m + g.astype(f32),
+                    state["mu"], grads)
+                direction = mu
+                new_state = {"mu": mu}
+            else:
+                direction = jax.tree.map(lambda g: g.astype(f32), grads)
+                new_state = state
+            def step_leaf(p, d):
+                upd = lr * d
+                if cfg.weight_decay > 0.0:
+                    upd = upd + lr * cfg.weight_decay * p.astype(f32)
+                return (p.astype(f32) - upd).astype(p.dtype)
+            return jax.tree.map(step_leaf, params, direction), new_state
+
+        return OptimizerBundle(init, update)
+
+    if cfg.optimizer == "adam":
+        b1, b2, eps = 0.9, 0.999, 1e-8
+
+        def init(params):
+            z = lambda p: jnp.zeros(p.shape, f32)
+            return {"m": jax.tree.map(z, params),
+                    "v": jax.tree.map(z, params),
+                    "count": jnp.zeros((), jnp.int32)}
+
+        def update(grads, state, params, step):
+            if cfg.grad_clip > 0.0:
+                grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+            count = state["count"] + 1
+            lr = lr_fn(step)
+            m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(f32),
+                             state["m"], grads)
+            v = jax.tree.map(
+                lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(f32)),
+                state["v"], grads)
+            c1 = 1 - b1 ** count.astype(f32)
+            c2 = 1 - b2 ** count.astype(f32)
+
+            def step_leaf(p, m_, v_):
+                upd = lr * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+                if cfg.weight_decay > 0.0:
+                    upd = upd + lr * cfg.weight_decay * p.astype(f32)
+                return (p.astype(f32) - upd).astype(p.dtype)
+            new_params = jax.tree.map(step_leaf, params, m, v)
+            return new_params, {"m": m, "v": v, "count": count}
+
+        return OptimizerBundle(init, update)
+
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

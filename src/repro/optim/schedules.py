@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def make_schedule(cfg: TrainConfig):
+    """Returns lr(step) -> f32 scalar."""
+    base = jnp.float32(cfg.lr)
+
+    def lr_fn(step):
+        step = step.astype(jnp.float32)
+        lr = base
+        if cfg.schedule == "cosine":
+            total = max(cfg.total_steps - cfg.warmup_steps, 1)
+            frac = jnp.clip((step - cfg.warmup_steps) / total, 0.0, 1.0)
+            lr = base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        if cfg.warmup_steps > 0:
+            warm = jnp.minimum(step / cfg.warmup_steps, 1.0)
+            lr = lr * warm
+        return lr
+
+    return lr_fn

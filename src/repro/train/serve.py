@@ -1,0 +1,61 @@
+"""Batched autoregressive serving on top of prefill/decode.
+
+The Byzantine layer does not apply at inference; this module provides the
+end-to-end decode driver used by the serving example and the decode-shape
+dry runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_tokens", "max_seq",
+                                             "temperature"))
+def generate(params, cfg: ModelConfig, prompt, *, n_tokens: int,
+             max_seq: int, rng: Optional[jax.Array] = None,
+             temperature: float = 0.0):
+    """Greedy (or temperature-sampled) generation.
+
+    prompt: (B, Lp) int32 tokens (or (B, Lp, d) embeddings for stub
+    frontends — generated tokens are then fed back through the LM head's
+    embedding-free path, so stub archs decode token ids only if the config
+    has an ``embed`` table; MusicGen-style serving feeds codec frames).
+    Returns (B, n_tokens) int32.
+    """
+    if cfg.embed_stub and prompt.ndim == 2:
+        raise ValueError("stub-frontend archs need embedding prompts")
+    B = prompt.shape[0]
+    last_logits, cache = T.prefill(params, cfg, prompt, max_seq=max_seq)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def sample(logits, key):
+        if temperature > 0.0:
+            return jax.random.categorical(key, logits / temperature)
+        return logits.argmax(-1)
+
+    def body(carry, _):
+        logits, cache, key = carry
+        key, k1 = jax.random.split(key)
+        tok = sample(logits, k1).astype(jnp.int32)      # (B,)
+        if cfg.embed_stub:
+            # feed generated codec/text token back via the output head's
+            # transpose as a pseudo-embedding (stub frontends have no
+            # token table; this matches the dry-run serving path)
+            emb = params["lm_head"].T[tok][:, None, :].astype(cfg.dtype)
+            logits_next, cache = T.decode_step(params, cfg, emb, cache)
+        else:
+            logits_next, cache = T.decode_step(params, cfg, tok[:, None],
+                                               cache)
+        return (logits_next, cache, key), tok
+
+    (_, _, _), toks = jax.lax.scan(body, (last_logits, cache, rng), None,
+                                   length=n_tokens)
+    return toks.T                                       # (B, n_tokens)

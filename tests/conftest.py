@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests and benches must see
+the single real CPU device; only launch/dryrun.py forces 512 devices."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tree_allclose(a, b, atol=1e-5, rtol=1e-5):
+    ok = jax.tree.map(
+        lambda x, y: jnp.allclose(jnp.asarray(x, jnp.float32),
+                                  jnp.asarray(y, jnp.float32),
+                                  atol=atol, rtol=rtol), a, b)
+    return all(jax.tree_util.tree_leaves(ok))

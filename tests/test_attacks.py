@@ -1,0 +1,96 @@
+"""Attack semantics: byzantine rows rewritten, honest rows untouched."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks as atk
+
+M = 8
+BYZ = jnp.arange(M) < 3
+
+
+def grads(key=jax.random.PRNGKey(0)):
+    return {"w": jax.random.normal(key, (M, 6, 2)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (M, 4))}
+
+
+def test_none_identity():
+    g = grads()
+    out, _ = atk.attack_none(g, BYZ, None, jnp.int32(0), None)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))
+
+
+def test_sign_flip():
+    g = grads()
+    out, _ = atk.attack_sign_flip(g, BYZ, None, jnp.int32(0), None)
+    np.testing.assert_allclose(np.asarray(out["w"][:3]),
+                               -np.asarray(g["w"][:3]))
+    np.testing.assert_allclose(np.asarray(out["w"][3:]),
+                               np.asarray(g["w"][3:]))
+
+
+def test_scaled_flip():
+    g = grads()
+    out, _ = atk.make_scaled_flip(0.6)(g, BYZ, None, jnp.int32(0), None)
+    np.testing.assert_allclose(np.asarray(out["b"][:3]),
+                               -0.6 * np.asarray(g["b"][:3]), rtol=1e-6)
+
+
+def test_variance_attack_shifts_mean_within_sigma():
+    g = grads()
+    z = 0.3
+    out, _ = atk.make_variance_attack(z)(g, BYZ, None, jnp.int32(0), None)
+    gw = np.asarray(g["w"][3:])
+    mu, sd = gw.mean(0), gw.std(0)
+    np.testing.assert_allclose(np.asarray(out["w"][0]), mu - z * sd,
+                               rtol=1e-4, atol=1e-5)
+    # collusion: all byzantine rows identical
+    np.testing.assert_array_equal(np.asarray(out["w"][0]),
+                                  np.asarray(out["w"][2]))
+
+
+def test_ipm():
+    g = grads()
+    out, _ = atk.make_ipm(2.0)(g, BYZ, None, jnp.int32(0), None)
+    mu = np.asarray(g["w"][3:]).mean(0)
+    np.testing.assert_allclose(np.asarray(out["w"][1]), -2.0 * mu,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_delayed_replays_old_mean():
+    g0, g1, g2 = grads(), grads(jax.random.PRNGKey(1)), grads(
+        jax.random.PRNGKey(2))
+    attack = atk.make_delayed(2)
+    state = attack.init(jax.tree.map(lambda x: x[0], g0["w"])
+                        if False else {"w": g0["w"][0], "b": g0["b"][0]})
+    out0, state = attack(g0, BYZ, state, jnp.int32(0), None)
+    out1, state = attack(g1, BYZ, state, jnp.int32(1), None)
+    out2, state = attack(g2, BYZ, state, jnp.int32(2), None)
+    # step 2 byzantine rows replay the honest mean from step 0
+    mu0 = np.asarray(g0["w"][3:]).mean(0)
+    np.testing.assert_allclose(np.asarray(out2["w"][0]), mu0,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_burst_windows():
+    attack = atk.make_burst(start=2, length=2, burst_scale=5.0)
+    g = grads()
+    for t, active in [(0, False), (2, True), (3, True), (4, False)]:
+        out, _ = attack(g, BYZ, None, jnp.int32(t), None)
+        if active:
+            np.testing.assert_allclose(np.asarray(out["w"][0]),
+                                       -5.0 * np.asarray(g["w"][0]),
+                                       rtol=1e-6)
+        else:
+            np.testing.assert_array_equal(np.asarray(out["w"][0]),
+                                          np.asarray(g["w"][0]))
+
+
+def test_registry_contains_paper_attacks():
+    reg = atk.make_registry()
+    for name in ("sign_flip", "variance", "delayed", "label_flip",
+                 "safeguard_x0.6", "safeguard_x0.7", "ipm"):
+        assert name in reg
+    assert reg["label_flip"].data_attack

@@ -1,0 +1,246 @@
+"""Layer-level oracles: SSD vs naive recurrence, RG-LRU vs sequential
+loop, causal conv, RoPE properties, ring buffers, blocked flash vs dense."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+f32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# SSD
+# --------------------------------------------------------------------------
+
+def ssd_naive(x, dt, A, B, C):
+    """Token-by-token linear recurrence oracle."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = np.repeat(np.asarray(B, np.float64), rep, axis=2)
+    Ch = np.repeat(np.asarray(C, np.float64), rep, axis=2)
+    xn = np.asarray(x, np.float64)
+    dtn = np.asarray(dt, np.float64)
+    An = np.asarray(A, np.float64)
+    s = np.zeros((b, h, p, n))
+    ys = np.zeros((b, l, h, p))
+    for t in range(l):
+        dA = np.exp(dtn[:, t] * An)                       # (b, h)
+        s = s * dA[..., None, None] + np.einsum(
+            "bhp,bhn->bhpn", xn[:, t] * dtn[:, t][..., None], Bh[:, t])
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", s, Ch[:, t])
+    return ys, s
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("groups", [1, 2])
+def test_ssd_scan_matches_naive(chunk, groups, rng):
+    b, l, h, p, n = 2, 32, 4, 8, 16
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, l, groups, n))
+    C = jax.random.normal(jax.random.fold_in(rng, 9), (b, l, groups, n))
+    y, final = L.ssd_scan(x, dt, A, B, C, chunk)
+    y_ref, s_ref = ssd_naive(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), s_ref, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_decode_continues_scan(rng):
+    b, l, h, p, n = 1, 16, 2, 4, 8
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (b, l + 1, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l + 1, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, l + 1, 1, n))
+    C = jax.random.normal(jax.random.fold_in(rng, 7), (b, l + 1, 1, n))
+    _, state = L.ssd_scan(x[:, :l], dt[:, :l], A, B[:, :l], C[:, :l], 8)
+    new_state, y1 = L.ssd_decode_step(state, x[:, l], dt[:, l], A,
+                                      B[:, l], C[:, l])
+    y_full, s_full = ssd_naive(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), y_full[:, l], rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(new_state), s_full, rtol=1e-4,
+                               atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+def test_rglru_scan_matches_loop(rng):
+    b, l, d = 2, 24, 8
+    ks = jax.random.split(rng, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (b, l, d)))
+    bb = jax.random.normal(ks[1], (b, l, d))
+    h0 = jax.random.normal(ks[2], (b, d))
+    h, h_last = L._rglru_scan(a, bb, h0)
+    s = np.asarray(h0, np.float64)
+    for t in range(l):
+        s = np.asarray(a[:, t]) * s + np.asarray(bb[:, t])
+        np.testing.assert_allclose(np.asarray(h[:, t]), s, rtol=1e-4,
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), s, rtol=1e-4, atol=1e-5)
+
+
+def test_causal_conv_matches_manual(rng):
+    b, l, c, w = 2, 10, 3, 4
+    x = jax.random.normal(rng, (b, l, c))
+    wgt = jax.random.normal(jax.random.fold_in(rng, 1), (w, c))
+    bias = jax.random.normal(jax.random.fold_in(rng, 2), (c,))
+    y, state = L._causal_conv(x, wgt, bias)
+    xp = np.concatenate([np.zeros((b, w - 1, c)), np.asarray(x)], axis=1)
+    for t in range(l):
+        want = (xp[:, t:t + w] * np.asarray(wgt)[None]).sum(1) + \
+            np.asarray(bias)
+        np.testing.assert_allclose(np.asarray(y[:, t]), want, rtol=1e-4,
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), xp[:, -(w - 1):],
+                               atol=1e-6)
+
+
+def test_causal_conv_decode_chaining(rng):
+    b, l, c, w = 1, 8, 2, 4
+    x = jax.random.normal(rng, (b, l, c))
+    wgt = jax.random.normal(jax.random.fold_in(rng, 1), (w, c))
+    bias = jnp.zeros((c,))
+    y_full, _ = L._causal_conv(x, wgt, bias)
+    y_steps = []
+    state = jnp.zeros((b, w - 1, c))
+    for t in range(l):
+        y, state = L._causal_conv(x[:, t:t + 1], wgt, bias, state)
+        y_steps.append(y[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(y_steps, 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# Positions
+# --------------------------------------------------------------------------
+
+def test_rope_preserves_norm(rng):
+    x = jax.random.normal(rng, (2, 8, 4, 32))
+    cos, sin = L.rope_cos_sin(jnp.arange(8)[None].repeat(2, 0), 32, 1e4)
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property(rng):
+    """<rope(q, i), rope(k, j)> depends only on i - j."""
+    q = jax.random.normal(rng, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 1, 1, 16))
+
+    def dot_at(i, j):
+        ci, si = L.rope_cos_sin(jnp.array([[i]]), 16, 1e4)
+        cj, sj = L.rope_cos_sin(jnp.array([[j]]), 16, 1e4)
+        qi = L.apply_rope(q, ci, si)
+        kj = L.apply_rope(k, cj, sj)
+        return float((qi * kj).sum())
+
+    assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-5
+
+
+def test_partial_rope_passthrough(rng):
+    x = jax.random.normal(rng, (1, 4, 2, 32))
+    cos, sin = L.rope_cos_sin(jnp.arange(4)[None], 8, 1e4)   # 25% rotary
+    y = L.apply_rope(x, cos, sin, fraction=0.25)
+    np.testing.assert_array_equal(np.asarray(y[..., 8:]),
+                                  np.asarray(x[..., 8:]))
+    assert not np.allclose(np.asarray(y[..., :8]), np.asarray(x[..., :8]))
+
+
+def test_mrope_sections_rotate_by_stream(rng):
+    x = jax.random.normal(rng, (1, 3, 1, 16))
+    # identical position streams == standard rope
+    pos3 = jnp.broadcast_to(jnp.arange(3)[None, None], (3, 1, 3))
+    cm, sm = L.mrope_cos_sin(pos3, 16, 1e4, (3, 3, 2))
+    cs, ss = L.rope_cos_sin(jnp.arange(3)[None], 16, 1e4)
+    np.testing.assert_allclose(np.asarray(cm), np.asarray(cs), atol=1e-6)
+    # different streams differ
+    pos3b = pos3.at[1].add(5)
+    cm2, _ = L.mrope_cos_sin(pos3b, 16, 1e4, (3, 3, 2))
+    assert not np.allclose(np.asarray(cm2), np.asarray(cm))
+
+
+# --------------------------------------------------------------------------
+# Ring buffer
+# --------------------------------------------------------------------------
+
+def test_ring_from_full_maps_positions(rng):
+    B, Lf, S = 1, 10, 4
+    full = jnp.arange(Lf, dtype=f32)[None, :, None]
+    ring = L.ring_from_full(full, S)
+    # position p lives at slot p % S; last S positions kept
+    for p in range(Lf - S, Lf):
+        assert float(ring[0, p % S, 0]) == p
+
+
+def test_ring_from_full_short_seq(rng):
+    full = jnp.arange(3, dtype=f32)[None, :, None]
+    ring = L.ring_from_full(full, 8)
+    assert float(ring[0, 0, 0]) == 0 and float(ring[0, 2, 0]) == 2
+    assert float(jnp.abs(ring[0, 3:]).sum()) == 0
+
+
+# --------------------------------------------------------------------------
+# Blocked flash (jnp)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 48])
+def test_flash_jnp_vs_dense(window, rng):
+    B, H, Lq, D = 2, 4, 128, 32
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, Lq, H, D))
+    k = jax.random.normal(ks[1], (B, Lq, H, D))
+    v = jax.random.normal(ks[2], (B, Lq, H, D))
+    out = L.flash_attention_jnp(q, k, v, scale=0.2, window=window,
+                                block_q=32, block_k=32)
+    mask = L.causal_mask(Lq, Lq, window=window)[None, None, None]
+    want = L.attention(q, k, v, scale=0.2, mask=mask).reshape(B, Lq, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_jnp_grad_matches_dense(rng):
+    B, H, Lq, D = 1, 2, 64, 16
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, Lq, H, D))
+    k = jax.random.normal(ks[1], (B, Lq, H, D))
+    v = jax.random.normal(ks[2], (B, Lq, H, D))
+
+    def f_flash(q):
+        return L.flash_attention_jnp(q, k, v, scale=0.25, block_q=16,
+                                     block_k=16).sum()
+
+    def f_dense(q):
+        mask = L.causal_mask(Lq, Lq)[None, None, None]
+        return L.attention(q, k, v, scale=0.25, mask=mask).sum()
+
+    g1 = jax.grad(f_flash)(q)
+    g2 = jax.grad(f_dense)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_moe_aux_loss_uniform_router():
+    """A perfectly uniform router gives aux loss ~= 1 (Switch norm)."""
+    import repro.configs as C
+    import dataclasses
+    cfg = dataclasses.replace(C.get_smoke("granite-moe-3b-a800m"),
+                              capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    params = L.moe_init(key, cfg)
+    params["router"] = jnp.zeros_like(params["router"])
+    x = jax.random.normal(key, (2, 16, cfg.d_model))
+    y, aux = L.moe_apply(params, cfg, x)
+    assert y.shape == x.shape
+    assert abs(float(aux) - 1.0) < 0.05

@@ -1,0 +1,163 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import SafeguardConfig, init_state, safeguard_step
+from repro.core import aggregators as agg
+from repro.core import attacks as atk
+from repro.core import tree_utils as tu
+from repro.core import sketch as sk
+
+SET = dict(deadline=None, max_examples=25,
+           suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+finite = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+def stacks(m_min=4, m_max=12, d_max=8):
+    return hnp.arrays(np.float32,
+                      st.tuples(st.integers(m_min, m_max),
+                                st.integers(1, d_max),
+                                st.integers(1, d_max)),
+                      elements=finite)
+
+
+@given(stacks())
+@settings(**SET)
+def test_gram_matches_numpy(arr):
+    g = {"x": jnp.asarray(arr)}
+    gram = np.asarray(tu.tree_gram(g))
+    flat = arr.reshape(arr.shape[0], -1).astype(np.float64)
+    np.testing.assert_allclose(gram, flat @ flat.T, rtol=1e-3, atol=1e-3)
+
+
+@given(stacks())
+@settings(**SET)
+def test_sqdist_nonneg_symmetric_zero_diag(arr):
+    d = np.asarray(tu.tree_pairwise_sqdist({"x": jnp.asarray(arr)}))
+    assert (d >= 0).all()
+    np.testing.assert_allclose(d, d.T, atol=1e-3)
+    np.testing.assert_allclose(np.diagonal(d), 0.0, atol=1e-3)
+
+
+@given(stacks(), st.integers(0, 1000))
+@settings(**SET)
+def test_coord_median_bounded_and_permutation_invariant(arr, seed):
+    g = {"x": jnp.asarray(arr)}
+    med = np.asarray(agg.coordinate_median(g)["x"])
+    assert (med >= arr.min(axis=0) - 1e-6).all()
+    assert (med <= arr.max(axis=0) + 1e-6).all()
+    perm = np.random.RandomState(seed).permutation(arr.shape[0])
+    med2 = np.asarray(agg.coordinate_median({"x": jnp.asarray(arr[perm])})["x"])
+    np.testing.assert_allclose(med, med2, atol=1e-6)
+
+
+@given(stacks(m_min=6))
+@settings(**SET)
+def test_trimmed_mean_bounded(arr):
+    out = np.asarray(agg.trimmed_mean({"x": jnp.asarray(arr)}, trim=1)["x"])
+    s = np.sort(arr, axis=0)
+    assert (out >= s[1] - 1e-5).all() and (out <= s[-2] + 1e-5).all()
+
+
+@given(stacks(m_min=6), st.integers(1, 2))
+@settings(**SET)
+def test_krum_returns_a_worker(arr, b):
+    g = {"x": jnp.asarray(arr)}
+    out = np.asarray(agg.krum(g, n_byz=b)["x"])
+    assert any(np.allclose(out, arr[i], atol=1e-6)
+               for i in range(arr.shape[0]))
+
+
+@given(st.integers(4, 12), st.integers(0, 5), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_honest_execution_never_evicts(m, steps_extra, seed):
+    """Concentration guarantee (Lemma 3.2) at test scale: with threshold
+    floor above the noise level, no honest worker is ever evicted."""
+    key = jax.random.PRNGKey(seed)
+    cfg = SafeguardConfig(m=m, T0=8, T1=24, threshold_floor=1.0)
+    params = {"w": jnp.zeros((6, 3))}
+    stt = init_state(cfg, params)
+    for t in range(10 + steps_extra):
+        key, k = jax.random.split(key)
+        g = {"w": 1.0 + 0.05 * jax.random.normal(k, (m, 6, 3))}
+        stt, _, _ = safeguard_step(stt, g, cfg)
+    assert bool(stt.good.all())
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_safeguard_permutation_equivariance(seed):
+    """Relabeling workers permutes the good-mask identically."""
+    m = 8
+    key = jax.random.PRNGKey(seed)
+    perm = jax.random.permutation(jax.random.fold_in(key, 1), m)
+    cfg = SafeguardConfig(m=m, T0=8, T1=16, threshold_floor=0.3)
+    byz = jnp.arange(m) < 3
+
+    def run(order):
+        stt = init_state(cfg, {"w": jnp.zeros((5,))})
+        kk = key
+        for t in range(20):
+            kk, k = jax.random.split(kk)
+            g = {"w": 1.0 + 0.05 * jax.random.normal(k, (m, 5))}
+            g, _ = atk.attack_sign_flip(g, byz, None, jnp.int32(t), k)
+            g = {"w": g["w"][order]}
+            stt, _, _ = safeguard_step(stt, g, cfg)
+        return stt.good
+
+    base = run(jnp.arange(m))
+    permuted = run(perm)
+    np.testing.assert_array_equal(np.asarray(base)[np.asarray(perm)],
+                                  np.asarray(permuted))
+
+
+@given(hnp.arrays(np.float32, st.tuples(st.integers(2, 6),
+                                        st.integers(64, 256)),
+                  elements=finite))
+@settings(**SET)
+def test_sketch_preserves_distance_ordering(arr):
+    """JL property (statistical): sketched distances approximate exact
+    distances within generous relative error for well-separated pairs."""
+    g = {"x": jnp.asarray(arr)}
+    exact = np.asarray(tu.tree_pairwise_sqdist(g))
+    sks = sk.sketch_tree(g, k=1024, reps=4, seed=0)
+    approx = np.asarray(sk.sketch_pairwise_sqdist(sks))
+    m = arr.shape[0]
+    for i in range(m):
+        for j in range(m):
+            if exact[i, j] > 1e-3:
+                assert abs(approx[i, j] - exact[i, j]) < 0.5 * exact[i, j] \
+                    + 1e-2
+
+
+@given(st.integers(1, 40), st.integers(2, 30))
+@settings(**SET)
+def test_ring_from_full_property(L, S):
+    from repro.models import layers
+    full = jnp.arange(L, dtype=jnp.float32)[None, :, None]
+    ring = np.asarray(layers.ring_from_full(full, S))[0, :, 0]
+    for p in range(max(0, L - S), L):
+        assert ring[p % S] == p
+
+
+@given(st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_variance_attack_within_population_variance(m_half, seed):
+    """The attack stays statistically plausible: byzantine coords lie
+    within [mu - 3 sigma, mu + 3 sigma] of the honest population."""
+    m = 2 * m_half
+    key = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(key, (m, 16))}
+    byz = jnp.arange(m) < m_half // 2 + 1
+    out, _ = atk.make_variance_attack(0.3)(g, byz, None, jnp.int32(0), key)
+    gw = np.asarray(g["w"])[~np.asarray(byz)]
+    mu, sd = gw.mean(0), gw.std(0) + 1e-9
+    adv = np.asarray(out["w"])[0]
+    assert (np.abs(adv - mu) <= 3.0 * sd + 1e-5).all()

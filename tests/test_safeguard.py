@@ -1,0 +1,160 @@
+"""Safeguard core behaviour: the paper's qualitative guarantees at test
+scale — honest workers are never evicted, history-based attacks are caught,
+windows reset, and the aggregate ignores evicted workers."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SafeguardConfig, init_state, safeguard_step
+from repro.core import attacks as atk
+from repro.core import tree_utils as tu
+
+M = 10
+PARAMS = {"w": jnp.zeros((20, 5)), "b": jnp.zeros((5,))}
+
+
+def honest_grads(key, mu=1.0, sigma=0.05):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": mu + sigma * jax.random.normal(k1, (M, 20, 5)),
+        "b": mu + sigma * jax.random.normal(k2, (M, 5)),
+    }
+
+
+def run(cfg, attack_fn, byz_mask, steps, key=None, astate=None):
+    st = init_state(cfg, PARAMS)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    step = jax.jit(lambda s, g: safeguard_step(s, g, cfg))
+    infos = []
+    for t in range(steps):
+        key, k = jax.random.split(key)
+        g = honest_grads(k)
+        g, astate = attack_fn(g, byz_mask, astate, jnp.int32(t), k)
+        st, agg, info = step(st, g)
+        infos.append(info)
+    return st, agg, infos
+
+
+def test_honest_never_evicted():
+    cfg = SafeguardConfig(m=M, T0=20, T1=60, threshold_floor=0.5)
+    byz = jnp.zeros((M,), bool)
+    st, _, _ = run(cfg, atk.attack_none, byz, 120)
+    assert bool(st.good.all())
+
+
+def test_sign_flip_caught_and_honest_kept():
+    cfg = SafeguardConfig(m=M, T0=20, T1=60, threshold_floor=0.5)
+    byz = jnp.arange(M) < 4
+    st, _, _ = run(cfg, atk.attack_sign_flip, byz, 60)
+    assert bool((~st.good[:4]).all()), "sign-flippers must be evicted"
+    assert bool(st.good[4:].all()), "honest workers must survive"
+
+
+def test_eviction_is_permanent_within_window():
+    cfg = SafeguardConfig(m=M, T0=50, T1=200, threshold_floor=0.5)
+    byz = jnp.arange(M) < 3
+    # burst attack active only in steps [10, 25): after it stops, workers
+    # must STAY evicted (no reset period configured)
+    attack = atk.make_burst(start=10, length=15, burst_scale=5.0)
+    st, _, _ = run(cfg, attack, byz, 45)
+    assert bool((~st.good[:3]).all())
+    assert bool(st.good[3:].all())
+
+
+def test_reset_period_restores_workers():
+    cfg = SafeguardConfig(m=M, T0=10, T1=20, threshold_floor=0.5,
+                          reset_period=30)
+    byz = jnp.arange(M) < 3
+    attack = atk.make_burst(start=0, length=10, burst_scale=5.0)
+    st, _, infos = run(cfg, attack, byz, 35)
+    # evicted during the burst...
+    assert not bool(infos[12]["good"][:3].all())
+    # ...but restored at the reset and kept (attack long over)
+    assert bool(st.good.all())
+
+
+def test_aggregate_excludes_evicted():
+    cfg = SafeguardConfig(m=M, T0=20, T1=60, threshold_floor=0.5,
+                          aggregate_prefilter=False)
+    byz = jnp.arange(M) < 4
+    st, agg, _ = run(cfg, atk.attack_sign_flip, byz, 60)
+    # after eviction the aggregate is the honest mean (~mu=1.0)
+    assert abs(float(agg["w"].mean()) - 1.0) < 0.1
+
+
+def test_variance_attack_caught_with_large_shift():
+    # z=1.5 (the paper's 50-node setting) drifts linearly and must be caught
+    cfg = SafeguardConfig(m=M, T0=50, T1=150, threshold_floor=0.2)
+    byz = jnp.arange(M) < 4
+    attack = atk.make_variance_attack(z_max=1.5)
+    st, _, _ = run(cfg, attack, byz, 150)
+    assert bool((~st.good[:4]).all())
+    assert bool(st.good[4:].all())
+
+
+def test_detection_statistic_linear_vs_sqrt():
+    """Paper Figure 2(a): ||B_i - B_med|| grows ~linearly for a variance
+    attacker vs ~sqrt(t) for honest workers."""
+    cfg = SafeguardConfig(m=M, T0=10**6, T1=10**6,
+                          threshold_floor=10**6)   # filter disabled
+    byz = jnp.arange(M) < 4
+    attack = atk.make_variance_attack(z_max=1.5)
+    st = init_state(cfg, PARAMS)
+    key = jax.random.PRNGKey(1)
+    astate = None
+    step = jax.jit(lambda s, g: safeguard_step(s, g, cfg))
+    at = {}
+    for t in range(200):
+        key, k = jax.random.split(key)
+        g, astate = attack(honest_grads(k), byz, astate, jnp.int32(t), k)
+        st, _, info = step(st, g)
+        if t in (49, 199):
+            at[t] = info["dist_to_med_B"]
+    byz_growth = float(at[199][0] / at[49][0])
+    honest_growth = float(at[199][5] / jnp.maximum(at[49][5], 1e-6))
+    assert byz_growth > 3.0            # ~linear: 200/50 = 4x
+    assert byz_growth > 1.5 * honest_growth
+
+
+def test_single_vs_double_mode():
+    cfg_s = SafeguardConfig(m=M, T0=30, T1=30, mode="single",
+                            threshold_floor=0.5)
+    byz = jnp.arange(M) < 4
+    st, _, _ = run(cfg_s, atk.attack_sign_flip, byz, 60)
+    assert bool((~st.good[:4]).all())
+    assert st.A is None
+
+
+def test_theoretical_rule():
+    t0, t1 = SafeguardConfig.theoretical_thresholds(20, 60, M, V=0.2)
+    cfg = SafeguardConfig(m=M, T0=20, T1=60, rule="theoretical",
+                          thresh0=t0, thresh1=t1)
+    byz = jnp.arange(M) < 4
+    st, _, _ = run(cfg, atk.attack_none, byz, 60)
+    assert bool(st.good.all())
+    st, _, _ = run(cfg, atk.attack_sign_flip, byz, 60)
+    assert bool((~st.good[:4]).all())
+    assert bool(st.good[4:].all())
+
+
+def test_sketched_matches_exact_decisions():
+    byz = jnp.arange(M) < 4
+    results = {}
+    for sketch in (False, True):
+        cfg = SafeguardConfig(m=M, T0=20, T1=60, threshold_floor=0.5,
+                              use_sketch=sketch, sketch_k=512,
+                              sketch_reps=4)
+        st, _, _ = run(cfg, atk.attack_sign_flip, byz, 60)
+        results[sketch] = st.good
+    assert bool((results[False] == results[True]).all())
+
+
+def test_gaussian_perturbation_applied():
+    cfg = SafeguardConfig(m=M, T0=20, T1=60, threshold_floor=0.5, nu=0.5)
+    st = init_state(cfg, PARAMS)
+    g = honest_grads(jax.random.PRNGKey(0), sigma=0.0)
+    _, agg1, _ = safeguard_step(st, g, cfg, jax.random.PRNGKey(1))
+    _, agg2, _ = safeguard_step(st, g, cfg, jax.random.PRNGKey(2))
+    assert not jnp.allclose(agg1["w"], agg2["w"])
+    assert float(jnp.abs(agg1["w"] - 1.0).mean()) < 3 * 0.5

@@ -1,0 +1,99 @@
+"""Sharding-rule unit tests (no devices needed: rules are pure functions
+of shapes/paths given a mesh-like object)."""
+
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.launch import sharding as sh
+from repro.models import transformer as T
+
+
+class FakeMesh:
+    def __init__(self, multi_pod=False):
+        self.axis_names = (("pod", "data", "model") if multi_pod
+                           else ("data", "model"))
+        self.shape = dict(zip(self.axis_names,
+                              (2, 16, 16) if multi_pod else (16, 16)))
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_are_valid(arch, multi_pod):
+    cfg = C.get(arch)
+    mesh = FakeMesh(multi_pod)
+    abstract = T.init_abstract(cfg)
+    specs = sh.params_pspecs(abstract, mesh)
+
+    flat_a = jax.tree_util.tree_flatten_with_path(abstract)[0]
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_a) == len(flat_s)
+    for (path, leaf), spec in zip(flat_a, flat_s):
+        pstr = "/".join(str(p) for p in path)
+        assert len(spec) == len(leaf.shape), (pstr, spec, leaf.shape)
+        for dim, s in zip(leaf.shape, spec):
+            if s is None:
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (pstr, spec, leaf.shape)
+        # a mesh axis may appear at most once per spec
+        used = [a for s in spec if s is not None
+                for a in (s if isinstance(s, tuple) else (s,))]
+        assert len(used) == len(set(used)), (pstr, spec)
+
+
+def test_stack_axis_never_sharded():
+    cfg = C.get("granite-34b")
+    mesh = FakeMesh()
+    abstract = T.init_abstract(cfg)
+    specs = sh.params_pspecs(abstract, mesh)
+    blocks = specs["blocks"]
+    for spec in jax.tree_util.tree_leaves(
+            blocks, is_leaf=lambda x: isinstance(x, P)):
+        if len(spec) >= 1:
+            assert spec[0] is None
+
+
+def test_expert_dim_gets_model_axis():
+    cfg = C.get("deepseek-v2-236b")
+    mesh = FakeMesh()
+    abstract = T.init_abstract(cfg)
+    specs = sh.params_pspecs(abstract, mesh)
+    w_gate = specs["blocks"]["moe"]["w_gate"]
+    assert w_gate[1] == "model"        # 160 experts over 16-way model axis
+
+
+def test_stacked_grad_spec_moves_worker_to_data():
+    mesh = FakeMesh()
+    spec = P(None, "data", "model")
+    out = sh.stacked_grad_pspec(spec, mesh)
+    assert out[0] == "data"
+    assert out[1:] == (None, None, "model")
+
+
+def test_cache_specs_shard_batch_and_heads():
+    cfg = C.get("deepseek-coder-33b")
+    mesh = FakeMesh()
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 1024))
+    specs = sh.cache_pspecs(cache, mesh, 128)
+    kspec = specs["blocks"]["k"]
+    assert kspec[0] is None            # layer-stack axis
+    assert kspec[1] == "data"          # batch
+    assert "model" in tuple(kspec)     # one of the big dims
+
+
+def test_cache_specs_b1_replicated_batch():
+    cfg = C.get("mamba2-130m")
+    mesh = FakeMesh()
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, 1, 1024))
+    specs = sh.cache_pspecs(cache, mesh, 1)
+    sspec = specs["blocks"]["ssm"]
+    assert sspec[1] is None            # B=1 cannot shard

@@ -1,0 +1,142 @@
+"""Substrate tests: optimizers, schedules, data pipeline, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.data import pipeline as data_lib
+from repro.data import tasks
+from repro.optim import make_optimizer, global_norm, clip_by_global_norm
+from repro.optim.schedules import make_schedule
+from repro import checkpoint as ckpt
+
+
+def quad_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.0)}
+
+
+def quad_grads(params):
+    return jax.grad(lambda p: (p["w"] ** 2).sum() + p["b"] ** 2)(params)
+
+
+def run_opt(cfg, steps=200):
+    opt = make_optimizer(cfg)
+    params = quad_params()
+    state = opt.init(params)
+    for t in range(steps):
+        g = quad_grads(params)
+        params, state = opt.update(g, state, params, jnp.int32(t))
+    return params
+
+
+@pytest.mark.parametrize("cfg", [
+    TrainConfig(lr=0.1, optimizer="sgd"),
+    TrainConfig(lr=0.1, momentum=0.9, optimizer="sgd"),
+    TrainConfig(lr=0.05, optimizer="adam"),
+])
+def test_optimizers_minimize_quadratic(cfg):
+    params = run_opt(cfg)
+    assert float(global_norm(params)) < 1e-2
+
+
+def test_weight_decay_shrinks():
+    p1 = run_opt(TrainConfig(lr=0.01, optimizer="sgd"), steps=20)
+    p2 = run_opt(TrainConfig(lr=0.01, weight_decay=1.0, optimizer="sgd"),
+                 steps=20)
+    assert float(global_norm(p2)) < float(global_norm(p1))
+
+
+def test_grad_clip():
+    g = {"w": jnp.array([300.0, 400.0])}
+    clipped, norm = clip_by_global_norm(g, 5.0)
+    assert abs(float(norm) - 500.0) < 1e-3
+    np.testing.assert_allclose(np.asarray(clipped["w"]), [3.0, 4.0],
+                               rtol=1e-5)
+    g2, _ = clip_by_global_norm({"w": jnp.array([0.3, 0.4])}, 5.0)
+    np.testing.assert_allclose(np.asarray(g2["w"]), [0.3, 0.4], rtol=1e-6)
+
+
+def test_schedule_warmup_cosine():
+    cfg = TrainConfig(lr=1.0, warmup_steps=10, schedule="cosine",
+                      total_steps=110)
+    lr = make_schedule(cfg)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(110))) < 1e-6
+    assert float(lr(jnp.int32(60))) < float(lr(jnp.int32(20)))
+
+
+# --------------------------------------------------------------------------
+# data
+# --------------------------------------------------------------------------
+
+def test_lm_batches_shapes_and_determinism():
+    it1 = data_lib.lm_batches(100, 8, 16, seed=7, m=4)
+    it2 = data_lib.lm_batches(100, 8, 16, seed=7, m=4)
+    b1, b2 = next(it1), next(it2)
+    assert b1["tokens"].shape == (4, 2, 16)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = next(it1)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_label_flip_applies_to_byz_workers_only():
+    flip = jnp.array([True, False, False, False])
+    it = data_lib.lm_batches(100, 8, 16, seed=1, m=4, flip_mask=flip)
+    it0 = data_lib.lm_batches(100, 8, 16, seed=1, m=4)
+    b, b0 = next(it), next(it0)
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"][0]), 99 - np.asarray(b0["tokens"][0]))
+    np.testing.assert_array_equal(np.asarray(b["tokens"][1:]),
+                                  np.asarray(b0["tokens"][1:]))
+
+
+def test_stub_batches():
+    it = data_lib.stub_batches(32, 50, 6, 8, m=3)
+    b = next(it)
+    assert b["embeds"].shape == (3, 2, 8, 32)
+    assert b["labels"].shape == (3, 2, 8)
+    assert int(b["labels"].max()) < 50
+
+
+def test_teacher_task_learnable():
+    task = tasks.make_teacher_task(d_in=16, d_hidden=32, n_classes=4)
+    b = tasks.teacher_batch(task, jax.random.PRNGKey(0), 512)
+    # teacher itself achieves 100%
+    assert float(tasks.mlp_accuracy(task.teacher, b)) == 1.0
+    # labels are non-degenerate
+    counts = np.bincount(np.asarray(b["y"]), minlength=4)
+    assert (counts > 10).all()
+
+
+# --------------------------------------------------------------------------
+# checkpoint
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "blocks": [{"a": jnp.ones((2,))},
+                                  {"a": jnp.zeros((2,))}]},
+            "step": jnp.int32(7)}
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, tree, metadata={"note": "test"})
+    ckpt.save(d, 12, tree)
+    assert ckpt.latest_step(d) == 12
+    restored, meta = ckpt.restore(d, 7)
+    assert meta["metadata"]["note"] == "test"
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  np.arange(6.0).reshape(2, 3))
+    np.testing.assert_array_equal(restored["params"]["blocks"][1]["a"],
+                                  np.zeros((2,)))
+    assert int(restored["step"]) == 7
+
+
+def test_checkpoint_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "nope"))
