@@ -1,0 +1,27 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-fast bench-quick bench-overhead lint dryrun-smoke
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# skip the multi-minute dry-run end-to-end test
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick
+
+# regenerate the committed BENCH_safeguard_overhead.json baseline
+bench-overhead:
+	$(PY) -m benchmarks.run --quick --only overhead
+
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	@! grep -rn "breakpoint()\|pdb.set_trace" src tests benchmarks examples
+
+dryrun-smoke:
+	$(PY) -m repro.launch.dryrun --arch mamba2-130m --shape train_4k \
+	    --out /tmp/dryrun_smoke

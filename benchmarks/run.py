@@ -36,7 +36,7 @@ def main() -> None:
         "fig2a": lambda: fig2_detection.run(steps=max(steps, 120)),
         "fig2b": lambda: fig2_reset.run(steps=steps),
         "convex_attack": lambda: convex_attack.run(steps=max(steps, 150)),
-        "overhead": overhead.run,
+        "overhead": lambda: overhead.run(quick=args.quick),
         "kernels": bench_kernels.run,
         "roofline": roofline.run,
     }

@@ -19,29 +19,127 @@ Implements the paper's Algorithm 1 (double safe guard) and Algorithm 2
     workers, optionally plus the isotropic Gaussian perturbation
     ``xi ~ N(0, nu^2 I)`` used by the theory to escape saddle points.
 
-Two state representations are provided:
+Three state representations are provided (DESIGN.md §6):
 
-  * **exact** (paper-faithful): the accumulators are full stacked gradient
-    pytrees, ``O(m * d)`` state; pairwise distances via the Gram matrix
-    (``core.tree_utils.tree_gram``) which shards cleanly;
+  * **flat** (default): the accumulators are single ``(m, d_pad)``
+    matrices in one fixed ``tree_flatten`` layout (:class:`FlatLayout`,
+    computed once at :func:`init_state`; :func:`unflatten_row` recovers a
+    parameter pytree for diagnostics).  The accumulate-and-reset update is
+    one fused in-place chain of column-slice adds into the buffer (the
+    reset ``where`` is the only copy; every scatter after it updates in
+    place), and the pairwise-distance pass runs on the whole buffer at
+    once — the ``safeguard_filter`` Pallas Gram kernel
+    (``backend="pallas"``, interpret mode on CPU with the package's
+    ``ref.py`` as numerics oracle), a single XLA ``dot_general``
+    (``backend="xla"``, the choice under a sharded mesh, DESIGN.md §3), or
+    the fully fused accumulate+distance kernel streaming each d-tile
+    through VMEM exactly once (``backend="pallas_fused"``, the TPU hot
+    path — it needs the gradients flattened to one matrix first, which is
+    why it is not the CPU default);
+  * **stacked** (paper-faithful reference): full stacked gradient pytrees,
+    pairwise distances leaf-by-leaf via ``core.tree_utils.tree_gram``.
+    Kept as the numerics oracle and for model-axis-sharded giants whose
+    flat buffer would not fit a single row on one device;
   * **sketched** (beyond paper, DESIGN.md §3): accumulate CountSketch
     projections, ``O(m * r * k)`` state, identical filter decisions up to
     JL distortion.
 
 Everything is ``jit``-safe: masks instead of dynamic shapes, ``where``
-instead of branches.
+instead of branches; the flat layout is static pytree metadata.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import tree_utils as tu
 from repro.core import sketch as sk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------
+# Flat buffer layout
+# --------------------------------------------------------------------------
+
+_LANE = 128           # TPU lane multiple (feature axis)
+_BLOCK_D = 512        # preferred d-tile of the Pallas kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static description of the one-time ``tree_flatten`` of the model's
+    gradient pytree into a single ``(m_pad, d_pad)`` row-per-worker buffer.
+
+    Hashable (it rides along as pytree *metadata* of
+    :class:`SafeguardState`), computed exactly once at :func:`init_state`.
+    ``offsets[i]:offsets[i]+sizes[i]`` is leaf ``i``'s column slice.
+    """
+    treedef: Any                      # jax PyTreeDef of the param pytree
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    d: int                            # true model dimension
+    d_padded: int                     # d rounded up to a kernel-tile multiple
+
+
+def make_layout(grads_like) -> FlatLayout:
+    """``grads_like``: a parameter pytree (NOT worker-stacked).  The feature
+    axis is padded to the Pallas tile multiple (zeros never change
+    distances), so every downstream op is MXU-aligned with no per-step
+    re-padding."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads_like)
+    if not leaves:
+        raise ValueError("empty gradient pytree")
+    shapes, dtypes, offsets, sizes = [], [], [], []
+    off = 0
+    for leaf in leaves:
+        size = 1
+        for s in leaf.shape:
+            size *= int(s)
+        shapes.append(tuple(int(s) for s in leaf.shape))
+        dtypes.append(str(jnp.dtype(leaf.dtype)))
+        offsets.append(off)
+        sizes.append(size)
+        off += size
+    d = off
+    pad_to = _BLOCK_D if d >= _BLOCK_D else _LANE
+    d_padded = d + (-d) % pad_to
+    return FlatLayout(treedef=treedef, shapes=tuple(shapes),
+                      dtypes=tuple(dtypes), offsets=tuple(offsets),
+                      sizes=tuple(sizes), d=d, d_padded=d_padded)
+
+
+def flatten_stacked(grads, layout: FlatLayout) -> jax.Array:
+    """Worker-stacked pytree (leaves ``(m, ...)``) -> ``(m, d_pad)`` f32
+    matrix in the layout's column order, zero-padded feature columns."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    m = leaves[0].shape[0]
+    parts = [leaf.astype(jnp.float32).reshape(m, -1) for leaf in leaves]
+    flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if flat.shape[1] != layout.d:
+        raise ValueError(
+            f"gradient pytree has d={flat.shape[1]}, layout has {layout.d}")
+    if layout.d_padded != layout.d:
+        flat = jnp.pad(flat, ((0, 0), (0, layout.d_padded - layout.d)))
+    return flat
+
+
+def unflatten_row(row: jax.Array, layout: FlatLayout):
+    """Inverse of :func:`flatten_stacked` for one worker row ``(d_pad,)``:
+    recovers the parameter-pytree view of an accumulator (diagnostics)."""
+    out = []
+    for shape, dt, off, size in zip(layout.shapes, layout.dtypes,
+                                    layout.offsets, layout.sizes):
+        out.append(row[off:off + size].reshape(shape).astype(dt))
+    return jax.tree_util.tree_unflatten(layout.treedef, out)
 
 
 # --------------------------------------------------------------------------
@@ -60,6 +158,18 @@ class SafeguardConfig:
       * ``"empirical"`` — Appendix C.1 scoring + auto threshold;
       * ``"theoretical"`` — fixed thresholds ``thresh0/1 = Theta(sqrt(T))``,
         majority-ball median, eviction at ``2 * thresh``.
+    ``engine``:
+      * ``"flat"`` — flat-buffer streaming accumulators (default);
+      * ``"stacked"`` — paper-faithful stacked-pytree reference.
+    ``backend`` (flat engine only):
+      * ``"pallas"`` — in-place scatter accumulate + the blocked Pallas
+        Gram kernel (interpret mode off-TPU);
+      * ``"pallas_fused"`` — single streamed accumulate+distance kernel
+        (flattens the gradients to one matrix per step; the TPU hot path);
+        requires f32 accumulators, else falls back to ``"xla"``;
+      * ``"xla"`` — in-place scatter accumulate + one XLA ``dot_general``;
+        use under a sharded mesh where a single-device kernel cannot be
+        partitioned (DESIGN.md §3).
     """
     m: int                      # number of workers
     T0: int = 100               # short window length (steps)
@@ -84,7 +194,9 @@ class SafeguardConfig:
     sketch_k: int = 2048
     sketch_reps: int = 4
     sketch_seed: int = 0
-    # dtype for exact accumulators
+    # exact accumulators: state representation + distance implementation
+    engine: str = "flat"        # "flat" | "stacked"
+    backend: str = "pallas"     # "pallas" | "xla"
     acc_dtype: Any = jnp.float32
 
     def __post_init__(self):
@@ -92,6 +204,10 @@ class SafeguardConfig:
             raise ValueError(f"bad mode {self.mode!r}")
         if self.rule not in ("empirical", "theoretical"):
             raise ValueError(f"bad rule {self.rule!r}")
+        if self.engine not in ("flat", "stacked"):
+            raise ValueError(f"bad engine {self.engine!r}")
+        if self.backend not in ("pallas", "pallas_fused", "xla"):
+            raise ValueError(f"bad backend {self.backend!r}")
         if self.T0 > self.T1:
             raise ValueError("need T0 <= T1")
         if self.rule == "theoretical" and self.thresh0 <= 0:
@@ -115,22 +231,38 @@ class SafeguardConfig:
 # State
 # --------------------------------------------------------------------------
 
-@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SafeguardState:
-    """Carried across steps. ``A``/``B`` are stacked pytrees in exact mode,
-    ``(m, r*k)`` sketch matrices in sketched mode."""
+    """Carried across steps.
+
+    ``A``/``B`` are ``(m, d_pad)`` flat buffers under the flat engine,
+    stacked pytrees under the stacked engine, and ``(m, r*k)`` sketch
+    matrices in sketched mode.  ``layout`` is static pytree *metadata*
+    (``None`` unless the flat engine is active)."""
     good: jax.Array             # (m,) bool — currently-good mask
     step: jax.Array             # () int32
     A: Any                      # long-window accumulator (None in single mode)
     B: Any                      # short-window accumulator
     evicted_at: jax.Array       # (m,) int32, -1 if never evicted (diagnostic)
+    layout: Optional[FlatLayout] = None
+
+
+jax.tree_util.register_dataclass(
+    SafeguardState,
+    data_fields=("good", "step", "A", "B", "evicted_at"),
+    meta_fields=("layout",))
 
 
 def init_state(cfg: SafeguardConfig, grads_like) -> SafeguardState:
     """``grads_like``: a parameter pytree (NOT stacked) used for shapes."""
+    layout = None
     if cfg.use_sketch:
         acc = jnp.zeros((cfg.m, cfg.sketch_reps * cfg.sketch_k), jnp.float32)
+        A = acc if cfg.mode == "double" else None
+        B = acc
+    elif cfg.engine == "flat":
+        layout = make_layout(grads_like)
+        acc = jnp.zeros((cfg.m, layout.d_padded), cfg.acc_dtype)
         A = acc if cfg.mode == "double" else None
         B = acc
     else:
@@ -145,6 +277,7 @@ def init_state(cfg: SafeguardConfig, grads_like) -> SafeguardState:
         A=A,
         B=B,
         evicted_at=-jnp.ones((cfg.m,), jnp.int32),
+        layout=layout,
     )
 
 
@@ -204,12 +337,54 @@ def _accumulate_exact(acc, grads, reset, inv_ngood, dtype):
     return jax.tree.map(one, acc, grads)
 
 
+def _accumulate_flat(acc, grads, reset, scale, layout: FlatLayout):
+    """acc <- [reset ? 0 : acc] + flatten(grads) * scale, as ONE fused
+    in-place chain: the reset ``where`` materializes the new buffer once
+    and every per-leaf column-slice add after it updates that buffer in
+    place — no intermediate ``(m, d)`` flattened-gradient matrix."""
+    buf = jnp.where(reset, jnp.zeros_like(acc), acc)
+    leaves = jax.tree_util.tree_leaves(grads)
+    m = leaves[0].shape[0]
+    for leaf, off in zip(leaves, layout.offsets):
+        r = (leaf.astype(jnp.float32).reshape(m, -1)
+             * scale).astype(acc.dtype)
+        buf = buf.at[:, off:off + r.shape[1]].add(r)
+    return buf
+
+
+def _flat_sqdist(buf, cfg: SafeguardConfig):
+    """Pairwise squared distances of the flat accumulator: blocked Pallas
+    Gram kernel (one block under the CPU interpreter) or a single XLA
+    ``dot_general`` (shardable: worker rows stay on their data shards and
+    only the (m, m) output is combined)."""
+    if cfg.backend == "pallas":
+        from repro.kernels.safeguard_filter import pairwise_sqdist
+        return pairwise_sqdist(buf, block_d=None, interpret=not _on_tpu())
+    from repro.kernels.safeguard_filter import ref as sf_ref
+    return sf_ref.pairwise_sqdist(buf)
+
+
+def _flat_update(acc, grads, gflat, reset, scale, cfg: SafeguardConfig,
+                 layout: FlatLayout):
+    """One accumulator's flat-engine update -> (new_acc, sqdist).
+
+    ``gflat`` is the flattened gradient matrix, materialized by the caller
+    only for the ``pallas_fused`` backend (``None`` otherwise)."""
+    if gflat is not None:
+        from repro.kernels.safeguard_filter import fused_accumulate_sqdist
+        return fused_accumulate_sqdist(acc, gflat, reset, scale,
+                                       interpret=not _on_tpu())
+    new = _accumulate_flat(acc, grads, reset, scale, layout)
+    return new, _flat_sqdist(new, cfg)
+
+
 # --------------------------------------------------------------------------
 # The step
 # --------------------------------------------------------------------------
 
 def safeguard_step(state: SafeguardState, grads, cfg: SafeguardConfig,
-                   rng: Optional[jax.Array] = None):
+                   rng: Optional[jax.Array] = None, *,
+                   acc_sharding=None):
     """One master-side safeguard step.
 
     Args:
@@ -218,6 +393,9 @@ def safeguard_step(state: SafeguardState, grads, cfg: SafeguardConfig,
         Byzantine simulation (attacks) has already been applied.
       cfg:    SafeguardConfig.
       rng:    PRNG key for the Gaussian perturbation (required if nu > 0).
+      acc_sharding: optional ``NamedSharding`` pinned onto the flat gradient
+        buffer (and hence the accumulators) so the worker rows stay on the
+        ``data`` mesh axes under a sharded jit (DESIGN.md §3).
 
     Returns:
       (new_state, aggregated gradient pytree, info dict)
@@ -246,6 +424,21 @@ def safeguard_step(state: SafeguardState, grads, cfg: SafeguardConfig,
             A = jnp.where(reset_A, 0.0, state.A) + gsk * inv_ngood
         sqdist_B = sk.sketch_pairwise_sqdist(B)
         sqdist_A = sk.sketch_pairwise_sqdist(A) if A is not None else None
+    elif cfg.engine == "flat":
+        layout = state.layout
+        use_fused = (cfg.backend == "pallas_fused"
+                     and jnp.dtype(cfg.acc_dtype) == jnp.float32)
+        gflat = flatten_stacked(grads, layout) if use_fused else None
+        B, sqdist_B = _flat_update(state.B, grads, gflat, reset_B,
+                                   inv_ngood, cfg, layout)
+        A, sqdist_A = None, None
+        if cfg.mode == "double":
+            A, sqdist_A = _flat_update(state.A, grads, gflat, reset_A,
+                                       inv_ngood, cfg, layout)
+        if acc_sharding is not None:
+            B = jax.lax.with_sharding_constraint(B, acc_sharding)
+            if A is not None:
+                A = jax.lax.with_sharding_constraint(A, acc_sharding)
     else:
         B = _accumulate_exact(state.B, grads, reset_B, inv_ngood,
                               cfg.acc_dtype)
@@ -299,6 +492,7 @@ def safeguard_step(state: SafeguardState, grads, cfg: SafeguardConfig,
         A=A if cfg.mode == "double" else state.A,
         B=B,
         evicted_at=evicted_at,
+        layout=state.layout,
     )
     info = {
         "n_good": n_good,

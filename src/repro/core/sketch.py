@@ -9,6 +9,11 @@ Accumulating sketches instead of full gradients drops the safeguard state
 from ``O(m * d)`` to ``O(m * r * k)`` and removes the large accumulate /
 Gram traffic entirely.
 
+The sketch state is already a flat ``(m, r*k)`` matrix — the sketched
+safeguard is the degenerate (lossy) endpoint of the flat-buffer engine of
+``core.safeguard`` (DESIGN.md §6); it carries no :class:`FlatLayout`
+because rows are not unflattenable.
+
 The hash functions are multiply-mod hashes over the flat coordinate index,
 seeded per (leaf, repetition) so the projection is a fixed deterministic
 linear map — exactly what the JL argument requires.

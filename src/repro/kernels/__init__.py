@@ -1,14 +1,18 @@
 """Pallas TPU kernels for the compute hot-spots (DESIGN.md §5):
 
   * ``safeguard_filter`` — the master's O(m^2 d) pairwise-distance pass
-    over per-worker accumulators, d-tiled through VMEM with MXU rank-k
-    Gram updates;
+    over the flat ``(m, d_pad)`` accumulator buffer (DESIGN.md §6),
+    d-tiled through VMEM with MXU rank-k Gram updates; ships both the
+    plain Gram/distance kernel and the fully fused variant that applies
+    the windowed accumulate-and-reset in place (``input_output_aliases``)
+    while streaming each tile exactly once;
   * ``robust_agg``       — coordinate-wise median / trimmed-mean baselines
     (VPU sorting networks over the worker axis, d-tiled);
   * ``flash_attention``  — causal (+sliding-window, +GQA) blocked
     online-softmax attention shared by all transformer archs.
 
 Each package ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
-(jit-able wrapper with padding/dispatch) and ``ref.py`` (pure-jnp oracle).
-Kernels are validated on CPU with ``interpret=True``; TPU is the target.
+(jit-able wrapper with padding/tile choice/dispatch) and ``ref.py``
+(pure-jnp oracle).  Kernels are validated on CPU with ``interpret=True``
+against the oracle; TPU is the compiled target.
 """

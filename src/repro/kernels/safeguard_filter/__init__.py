@@ -1,2 +1,3 @@
-from repro.kernels.safeguard_filter.ops import pairwise_sqdist  # noqa: F401
+from repro.kernels.safeguard_filter.ops import (  # noqa: F401
+    fused_accumulate_sqdist, pairwise_sqdist)
 from repro.kernels.safeguard_filter import ref                  # noqa: F401

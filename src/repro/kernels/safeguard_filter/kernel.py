@@ -1,18 +1,28 @@
-"""Pallas kernel: blocked Gram / pairwise-distance matrix of per-worker
-gradient accumulators.
+"""Pallas kernels: blocked Gram / pairwise-distance pass over the flat
+per-worker accumulator buffer (DESIGN.md §5, §6).
 
 The safeguard filter needs all pairwise distances between m worker
 accumulators of dimension d (d = model size, up to tens of billions).
 Distances reduce to the Gram matrix, which is a rank-d update streamed
 through VMEM:
 
-    grid over d-tiles; each step loads an (m, bd) tile of the stacked
+    grid over d-tiles; each step loads an (m, bd) tile of the flat
     accumulator (HBM -> VMEM), issues one (m x bd) @ (bd x m)^T MXU
     matmul, and accumulates into an f32 (m, m) VMEM scratch; the final
     step expands the diagonal to emit squared distances.
 
-m is padded to the sublane multiple by ``ops.py``; ``block_d`` is a
-multiple of the 128-wide lane dimension so each tile is MXU-aligned.
+Two entry points:
+
+  * ``pairwise_sqdist_kernel`` — distances of an existing buffer;
+  * ``fused_accumulate_sqdist_kernel`` — the safeguard hot path: each
+    d-tile additionally applies the windowed accumulate-and-reset update
+    ``acc <- [reset ? 0 : acc] + g / n_good`` *in place*
+    (``input_output_aliases``) before feeding the MXU, so the O(m d)
+    state is streamed exactly once per step.
+
+m is padded to the sublane multiple by ``ops.py`` / the flat layout;
+``block_d`` is a multiple of the 128-wide lane dimension so each tile is
+MXU-aligned.
 """
 
 from __future__ import annotations
@@ -61,3 +71,67 @@ def pairwise_sqdist_kernel(a, *, block_d: int = 512,
         scratch_shapes=[pltpu.VMEM((m, m), jnp.float32)],
         interpret=interpret,
     )(a)
+
+
+def _fused_kernel(reset_ref, scale_ref, acc_ref, g_ref, newacc_ref,
+                  out_ref, gram_ref, *, nd: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+
+    # select, NOT multiply-by-(1-reset): a Byzantine inf/NaN in the old
+    # accumulator must be zeroed by the window reset (inf * 0 = NaN)
+    a = acc_ref[...].astype(jnp.float32)
+    a = jnp.where(reset_ref[0] != 0, jnp.zeros_like(a), a)
+    new = a + g_ref[...].astype(jnp.float32) * scale_ref[0]
+    newacc_ref[...] = new
+    gram_ref[...] += jax.lax.dot_general(
+        new, new, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == nd - 1)
+    def _finish():
+        g = gram_ref[...]
+        diag = jnp.diagonal(g)
+        sq = diag[:, None] + diag[None, :] - 2.0 * g
+        out_ref[...] = jnp.maximum(sq, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_accumulate_sqdist_kernel(acc, g, reset, scale, *,
+                                   block_d: int = 512,
+                                   interpret: bool = True):
+    """One streamed pass of the safeguard update (DESIGN.md §6).
+
+    acc, g: (m, d) f32 with d divisible by block_d; reset: (1,) int32;
+    scale: (1,) f32 (= 1 / n_good).  Returns (new_acc, sqdist) where
+    new_acc aliases acc's buffer and sqdist is the (m, m) f32 pairwise
+    squared-distance matrix of the UPDATED accumulators.
+    """
+    m, d = acc.shape
+    assert g.shape == (m, d), (acc.shape, g.shape)
+    assert d % block_d == 0, (d, block_d)
+    nd = d // block_d
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, nd=nd),
+        grid=(nd,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # reset
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # scale
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),     # acc tile
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),     # grad tile
+        ],
+        out_specs=[
+            pl.BlockSpec((m, block_d), lambda i: (0, i)),     # new acc
+            pl.BlockSpec((m, m), lambda i: (0, 0)),           # sqdist
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+            jax.ShapeDtypeStruct((m, m), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((m, m), jnp.float32)],
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(reset, scale, acc, g)

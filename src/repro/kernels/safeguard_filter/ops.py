@@ -1,6 +1,10 @@
-"""Jit-able wrapper for the safeguard pairwise-distance kernel: handles
-ragged d (zero-pad to a lane multiple — zeros do not change distances) and
-worker counts that are not sublane-aligned."""
+"""Jit-able wrappers for the safeguard flat-buffer kernels: handle ragged
+d (zero-pad to a lane multiple — zeros do not change distances or the
+accumulate), worker counts that are not sublane-aligned, and the d-tile
+choice.  Under the CPU interpreter the emulator's per-grid-step cost (not
+VMEM) is the overhead, so the wrappers run ONE whole-row block and skip
+the TPU alignment padding entirely; compiled TPU runs get 512-wide MXU
+tiles and sublane-aligned rows."""
 
 from __future__ import annotations
 
@@ -9,17 +13,71 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.safeguard_filter.kernel import pairwise_sqdist_kernel
+from repro.kernels.safeguard_filter.kernel import (
+    fused_accumulate_sqdist_kernel, pairwise_sqdist_kernel)
+
+_LANE = 128
+
+
+def _pick_block(d: int, block_d, interpret: bool) -> int:
+    """Largest MXU-aligned tile that divides d; the whole row when
+    interpreting."""
+    if block_d is not None:
+        return min(block_d, d)
+    if interpret:
+        return d
+    for bd in (512, 256, _LANE):
+        if d % bd == 0:
+            return bd
+    return d
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def pairwise_sqdist(a, *, block_d: int = 512, interpret: bool = True):
-    """a: (m, d) any dtype -> (m, m) f32 squared distances."""
+    """a: (m, d) any dtype -> (m, m) f32 squared distances.
+
+    ``block_d=None`` picks the tile automatically (one whole-row block
+    under the interpreter)."""
     m, d = a.shape
-    pad_m = (-m) % 8                     # TPU sublane multiple
-    bd = min(block_d, max(128, 128 * ((d + 127) // 128)))
+    pad_m = 0 if interpret else (-m) % 8     # TPU sublane multiple
+    if block_d is None:
+        bd = _pick_block(d if interpret else d + (-d) % _LANE, None,
+                         interpret)
+    else:
+        bd = min(block_d, max(_LANE, _LANE * ((d + _LANE - 1) // _LANE)))
     pad_d = (-d) % bd
     if pad_m or pad_d:
         a = jnp.pad(a, ((0, pad_m), (0, pad_d)))
     out = pairwise_sqdist_kernel(a, block_d=bd, interpret=interpret)
     return out[:m, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_accumulate_sqdist(acc, g, reset, scale, *, block_d=None,
+                            interpret: bool = True):
+    """Fused safeguard update: ``new = [reset ? 0 : acc] + g * scale`` and
+    the (m, m) pairwise squared distances of ``new``, in one streamed pass
+    (each d-tile of the accumulator goes HBM -> VMEM -> MXU exactly once).
+
+    acc, g: (m, d) f32 — the flat-buffer layout already pads d to the
+    lane multiple, so on TPU only the worker rows may need sublane
+    padding; the interpreter needs none.  reset: () bool/int.
+    scale: () float.
+
+    Returns (new_acc (m, d) f32, sqdist (m, m) f32).
+    """
+    m, d = acc.shape
+    pad_m = 0 if interpret else (-m) % 8
+    bd = _pick_block(d + (-d) % _LANE, block_d, interpret)
+    pad_d = (-d) % bd                    # pad to a tile multiple
+    if pad_m or pad_d:
+        acc = jnp.pad(acc, ((0, pad_m), (0, pad_d)))
+        g = jnp.pad(g, ((0, pad_m), (0, pad_d)))
+    reset1 = jnp.asarray(reset, jnp.int32).reshape((1,))
+    scale1 = jnp.asarray(scale, jnp.float32).reshape((1,))
+    new, sq = fused_accumulate_sqdist_kernel(
+        acc.astype(jnp.float32), g.astype(jnp.float32), reset1, scale1,
+        block_d=bd, interpret=interpret)
+    if pad_m or pad_d:
+        new, sq = new[:m, :d], sq[:m, :m]
+    return new, sq

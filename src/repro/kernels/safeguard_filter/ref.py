@@ -14,3 +14,12 @@ def pairwise_sqdist(a):
     g = gram(a)
     diag = jnp.diagonal(g)
     return jnp.maximum(diag[:, None] + diag[None, :] - 2.0 * g, 0.0)
+
+
+def fused_accumulate_sqdist(acc, g, reset, scale):
+    """Oracle for the fused safeguard update: windowed accumulate-and-reset
+    followed by pairwise distances of the updated accumulators."""
+    new = jnp.where(jnp.asarray(reset, bool), jnp.zeros_like(acc),
+                    acc).astype(jnp.float32) \
+        + g.astype(jnp.float32) * jnp.float32(scale)
+    return new, pairwise_sqdist(new)

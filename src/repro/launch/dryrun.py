@@ -103,6 +103,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # jax <= 0.4.x: [dict]
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     hlo_txt = compiled.as_text()
     colls, coll_counts = collective_bytes(hlo_txt)
@@ -171,7 +173,8 @@ def main():
                     choices=list(INPUT_SHAPES) + [None])
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--variant", default="exact",
-                    choices=["exact", "exact16", "sketch", "mean"])
+                    choices=["exact", "exact16", "stacked", "sketch",
+                             "mean"])
     ap.add_argument("--all", action="store_true",
                     help="sweep every (arch, shape)")
     ap.add_argument("--out", default="experiments/dryrun")

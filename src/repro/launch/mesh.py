@@ -15,6 +15,15 @@ from __future__ import annotations
 import jax
 
 
+def auto_axis_types(n_axes: int):
+    """``axis_types`` kwargs for Mesh/make_mesh, empty on jax versions
+    that predate ``jax.sharding.AxisType`` (everything was Auto there)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -28,9 +37,8 @@ def make_production_mesh(*, multi_pod: bool = False):
             "the dry run must set XLA_FLAGS=--xla_force_host_platform_"
             "device_count=512 before importing jax")
     import numpy as np
-    return jax.sharding.Mesh(
-        np.asarray(devices).reshape(shape), axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes,
+                             **auto_axis_types(len(axes)))
 
 
 def worker_axes(mesh) -> tuple:

@@ -7,9 +7,15 @@ Strategy (DESIGN.md §3): FSDP x TP —
     sharded data parallel), leading layer-stack axes excluded;
   * MoE expert tensors override the heuristic: the expert dim goes to
     ``model`` (expert parallelism), the feature dim to data;
-  * stacked per-worker gradients (and the safeguard accumulators) put the
-    worker axis on the data axes and keep only the ``model`` assignments of
-    the underlying parameter — the worker axis *is* the data axis;
+  * stacked per-worker gradients put the worker axis on the data axes and
+    keep only the ``model`` assignments of the underlying parameter — the
+    worker axis *is* the data axis;
+  * the flat safeguard accumulators (``(m_pad, d_pad)`` buffers, DESIGN.md
+    §6) shard their worker-row axis over the data axes — each data shard
+    owns its own workers' rows, so the windowed accumulate is collective-
+    free and only the ``(m, m)`` distance matrix is combined across shards
+    (:func:`flat_acc_pspec`); the padded feature axis goes to ``model``
+    when divisible;
   * decode caches shard batch over data and the largest remaining eligible
     dim (kv-heads, latent rank, or sequence) over model.
 
@@ -151,6 +157,18 @@ def stacked_grads_pspecs(param_specs, mesh):
     return jax.tree.map(
         lambda spec: stacked_grad_pspec(spec, mesh), param_specs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+def flat_acc_pspec(mesh, d_padded: int) -> P:
+    """Partition spec of a flat safeguard accumulator ``(m_pad, d_pad)``:
+    worker rows over the data axes (each shard owns a worker-row slice, so
+    the fused accumulate-and-reset is local), the padded feature axis over
+    ``model`` when divisible.  Under this spec the only cross-shard traffic
+    of the safeguard pass is the tiny ``(m, m)`` Gram combine."""
+    data_axes = mesh_lib.worker_axes(mesh)
+    worker = data_axes if len(data_axes) > 1 else data_axes[0]
+    col = "model" if d_padded % mesh_lib.model_size(mesh) == 0 else None
+    return P(worker, col)
 
 
 def cache_pspec(path, leaf, mesh, batch: int) -> P:

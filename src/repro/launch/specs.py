@@ -12,8 +12,12 @@ allocation ever happens (``jax.eval_shape`` end to end):
     preallocated cache.
 
 ``variant`` selects the aggregation implementation for §Perf:
-  "exact"    — paper-faithful O(m*d) accumulators (f32);
-  "exact16"  — accumulators in bf16;
+  "exact"    — flat-buffer O(m*d) accumulators (f32, DESIGN.md §6), rows
+               sharded over the data axes (XLA backend — the Pallas kernel
+               is a per-device program and cannot be partitioned);
+  "exact16"  — flat accumulators in bf16;
+  "stacked"  — paper-faithful stacked-pytree accumulators (the reference
+               representation; keeps per-leaf model-axis sharding);
   "sketch"   — CountSketch safeguard state (beyond paper);
   "mean"     — no safeguard (plain data-parallel SGD; the cost floor).
 """
@@ -50,9 +54,11 @@ def _replicated(tree, mesh):
 def make_sg_cfg(m: int, variant: str = "exact") -> Optional[sg.SafeguardConfig]:
     if variant == "mean":
         return None
-    kwargs: Dict[str, Any] = dict(m=m, T0=100, T1=600)
+    kwargs: Dict[str, Any] = dict(m=m, T0=100, T1=600, backend="xla")
     if variant == "exact16":
         kwargs["acc_dtype"] = jnp.bfloat16
+    if variant == "stacked":
+        kwargs["engine"] = "stacked"
     if variant == "sketch":
         kwargs.update(use_sketch=True, sketch_k=2048, sketch_reps=4)
     return sg.SafeguardConfig(**kwargs)
@@ -72,8 +78,14 @@ def build_train(cfg: ModelConfig, shape: InputShape, mesh, *,
     waxes = mesh_lib.worker_axes(mesh)
     spmd = waxes if len(waxes) > 1 else waxes[0]
     if sg_cfg is not None:
+        sg_acc_sharding = None
+        if not sg_cfg.use_sketch and sg_cfg.engine == "flat":
+            layout = sg.make_layout(T.init_abstract(cfg))
+            sg_acc_sharding = NamedSharding(
+                mesh, sh.flat_acc_pspec(mesh, layout.d_padded))
         step = tr.make_train_step(loss, opt, byz_mask=jnp.zeros((m,), bool),
                                   sg_cfg=sg_cfg, spmd_axis_name=spmd,
+                                  sg_acc_sharding=sg_acc_sharding,
                                   jit=False)
     else:
         step = tr.make_train_step(
@@ -118,13 +130,17 @@ def _sg_with_shardings(sg_a: sg.SafeguardState, sg_cfg, gspecs, mesh):
     def acc(tree):
         if tree is None:
             return None
-        if isinstance(tree, jax.ShapeDtypeStruct):   # sketch matrix (m, rk)
+        if isinstance(tree, jax.ShapeDtypeStruct):
+            # flat accumulator (m_pad, d_pad): worker rows on the data
+            # axes, feature columns on model (DESIGN.md §3/§6); sketch
+            # matrix (m, rk): worker rows on the data axes.
+            if sg_a.layout is not None:
+                spec = sh.flat_acc_pspec(mesh, sg_a.layout.d_padded)
+            else:
+                waxes = sh.mesh_lib.worker_axes(mesh)
+                spec = P(waxes if len(waxes) > 1 else waxes[0], None)
             return jax.ShapeDtypeStruct(
-                tree.shape, tree.dtype,
-                sharding=NamedSharding(
-                    mesh, P(sh.mesh_lib.worker_axes(mesh)
-                            if len(sh.mesh_lib.worker_axes(mesh)) > 1
-                            else sh.mesh_lib.worker_axes(mesh)[0], None)))
+                tree.shape, tree.dtype, sharding=NamedSharding(mesh, spec))
         return sh.with_shardings(tree, gspecs, mesh)
 
     rep = lambda s: jax.ShapeDtypeStruct(
@@ -132,7 +148,8 @@ def _sg_with_shardings(sg_a: sg.SafeguardState, sg_cfg, gspecs, mesh):
                                                            len(s.shape)))))
     return sg.SafeguardState(
         good=rep(sg_a.good), step=rep(sg_a.step),
-        A=acc(sg_a.A), B=acc(sg_a.B), evicted_at=rep(sg_a.evicted_at))
+        A=acc(sg_a.A), B=acc(sg_a.B), evicted_at=rep(sg_a.evicted_at),
+        layout=sg_a.layout)
 
 
 def _loss(cfg, params, batch):

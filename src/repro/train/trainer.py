@@ -10,7 +10,11 @@ master/worker protocol in SPMD form:
   2. the Byzantine simulation — an attack from ``core.attacks`` rewrites
      the rows of the stacked gradient marked by ``byz_mask``;
   3. aggregation — SafeguardSGD (stateful, the paper's contribution) or a
-     historyless baseline aggregator (coord-median, Krum, Zeno, ...);
+     historyless baseline aggregator (coord-median, Krum, Zeno, ...).
+     The safeguard's flat accumulator buffers (DESIGN.md §6) keep their
+     worker rows pinned to the ``data`` mesh axes via ``sg_acc_sharding``,
+     so the windowed accumulate stays shard-local and only the ``(m, m)``
+     distance matrix crosses shards;
   4. the optimizer update.
 
 ``Trainer`` wraps the step with a plain python loop, metric collection and
@@ -85,7 +89,8 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
                     aggregator: Optional[agg_lib.Aggregator] = None,
                     attack: Optional[atk_lib.Attack] = None,
                     zeno_eta: float = 0.1, zeno_rho: float = 5e-4,
-                    spmd_axis_name=None, jit: bool = True):
+                    spmd_axis_name=None, sg_acc_sharding=None,
+                    jit: bool = True):
     """Build the jitted training step.
 
     Exactly one of ``sg_cfg`` (the paper's defense) or ``aggregator`` (a
@@ -96,6 +101,10 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
     its data-axis sharding through the backward pass (without it XLA's
     propagation drops the worker sharding inside the layer scan and
     replicates multi-GiB attention buffers).
+
+    ``sg_acc_sharding``: optional ``NamedSharding`` for the safeguard's
+    flat accumulator buffers (see ``launch.sharding.flat_acc_pspec``);
+    ``None`` on a single device.
     """
     if (sg_cfg is None) == (aggregator is None):
         raise ValueError("pass exactly one of sg_cfg / aggregator")
@@ -122,7 +131,8 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
         if sg_cfg is not None:
             sg_state, agg, info = sg.safeguard_step(
                 state.sg_state, grads, sg_cfg,
-                k_noise if sg_cfg.nu > 0 else None)
+                k_noise if sg_cfg.nu > 0 else None,
+                acc_sharding=sg_acc_sharding)
             metrics["n_good"] = info["n_good"]
             metrics["caught_byz"] = (byz_mask & ~info["good"]).sum()
             metrics["evicted_honest"] = (~byz_mask & ~info["good"]).sum()

@@ -1,8 +1,14 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
 
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+Skips cleanly (instead of crashing collection) when ``hypothesis`` is not
+installed — it is an optional dev dependency, not a runtime one."""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

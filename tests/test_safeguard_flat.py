@@ -1,0 +1,190 @@
+"""Flat-buffer safeguard engine (DESIGN.md §6) equivalence suite: the
+flat engine must reproduce the stacked-pytree reference bit-for-bit in
+its *decisions* (eviction masks, eviction times, medians) and match the
+aggregate numerically, across mode x rule x reset-period x backend; plus
+layout round-trips and the fused-kernel oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SafeguardConfig, init_state, safeguard_step
+from repro.core import attacks as atk
+from repro.core import safeguard as sg
+from repro.kernels.safeguard_filter import fused_accumulate_sqdist
+from repro.kernels.safeguard_filter import ref as sf_ref
+
+M = 10
+PARAMS = {"w": jnp.zeros((20, 5)), "b": jnp.zeros((5,)),
+          "blocks": {"h": jnp.zeros((3, 4, 2))}}
+
+
+def honest_grads(key, mu=1.0, sigma=0.05):
+    ks = jax.random.split(key, len(jax.tree_util.tree_leaves(PARAMS)))
+    ks = iter(list(ks))
+    return jax.tree.map(
+        lambda p: mu + sigma * jax.random.normal(next(ks), (M,) + p.shape),
+        PARAMS)
+
+
+def run(cfg, attack_fn, byz_mask, steps, seed=0):
+    st = init_state(cfg, PARAMS)
+    key = jax.random.PRNGKey(seed)
+    astate = None
+    step = jax.jit(lambda s, g: safeguard_step(s, g, cfg))
+    agg = None
+    for t in range(steps):
+        key, k = jax.random.split(key)
+        g = honest_grads(k)
+        g, astate = attack_fn(g, byz_mask, astate, jnp.int32(t), k)
+        st, agg, info = step(st, g)
+    return st, agg, info
+
+
+ENGINE_GRID = [("stacked", "pallas"), ("flat", "pallas"), ("flat", "xla"),
+               ("flat", "pallas_fused")]
+
+
+@pytest.mark.parametrize("mode", ["double", "single"])
+@pytest.mark.parametrize("rule", ["empirical", "theoretical"])
+def test_flat_matches_stacked_decisions(mode, rule):
+    byz = jnp.arange(M) < 4
+    kwargs = dict(m=M, T0=20, T1=60, mode=mode, rule=rule)
+    if rule == "empirical":
+        kwargs["threshold_floor"] = 0.5
+    else:
+        t0, t1 = SafeguardConfig.theoretical_thresholds(20, 60, M, V=0.2)
+        kwargs.update(thresh0=t0, thresh1=t1)
+    outs = {}
+    for engine, backend in ENGINE_GRID:
+        cfg = SafeguardConfig(engine=engine, backend=backend, **kwargs)
+        st, agg, info = run(cfg, atk.attack_sign_flip, byz, 60)
+        outs[(engine, backend)] = (st, agg, info)
+
+    ref_st, ref_agg, ref_info = outs[("stacked", "pallas")]
+    assert bool((~ref_st.good[:4]).all()), "attack must be caught"
+    for key, (st, agg, info) in outs.items():
+        np.testing.assert_array_equal(np.asarray(st.good),
+                                      np.asarray(ref_st.good), err_msg=str(key))
+        np.testing.assert_array_equal(np.asarray(st.evicted_at),
+                                      np.asarray(ref_st.evicted_at),
+                                      err_msg=str(key))
+        assert int(info["med_B"]) == int(ref_info["med_B"]), key
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-5), agg, ref_agg)
+
+
+def test_flat_matches_stacked_with_reset_period():
+    byz = jnp.arange(M) < 3
+    attack = atk.make_burst(start=0, length=10, burst_scale=5.0)
+    outs = {}
+    for engine, backend in ENGINE_GRID:
+        cfg = SafeguardConfig(m=M, T0=10, T1=20, threshold_floor=0.5,
+                              reset_period=30, engine=engine,
+                              backend=backend)
+        st, _, _ = run(cfg, attack, byz, 35)
+        outs[(engine, backend)] = st
+    ref = outs[("stacked", "pallas")]
+    assert bool(ref.good.all()), "reset must restore workers"
+    for key, st in outs.items():
+        np.testing.assert_array_equal(np.asarray(st.good),
+                                      np.asarray(ref.good), err_msg=str(key))
+
+
+def test_flat_accumulator_equals_stacked_accumulator():
+    """The buffer itself (not just decisions) matches: unflattening the
+    flat accumulator row reproduces the stacked accumulator leaf."""
+    byz = jnp.zeros((M,), bool)
+    cfg_f = SafeguardConfig(m=M, T0=50, T1=100, threshold_floor=0.5)
+    cfg_s = SafeguardConfig(m=M, T0=50, T1=100, threshold_floor=0.5,
+                            engine="stacked")
+    st_f, _, _ = run(cfg_f, atk.attack_none, byz, 7)
+    st_s, _, _ = run(cfg_s, atk.attack_none, byz, 7)
+    for i in (0, M - 1):
+        row = sg.unflatten_row(st_f.B[i], st_f.layout)
+        stacked_i = jax.tree.map(lambda l: l[i], st_s.B)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-5), row, stacked_i)
+
+
+def test_sketched_state_unaffected_by_engine_flag():
+    """use_sketch wins over the engine choice and carries no layout."""
+    byz = jnp.arange(M) < 4
+    goods = []
+    for engine in ("flat", "stacked"):
+        cfg = SafeguardConfig(m=M, T0=20, T1=60, threshold_floor=0.5,
+                              use_sketch=True, sketch_k=512, sketch_reps=4,
+                              engine=engine)
+        st, _, _ = run(cfg, atk.attack_sign_flip, byz, 60)
+        assert st.layout is None
+        assert st.B.shape == (M, 4 * 512)
+        goods.append(np.asarray(st.good))
+    np.testing.assert_array_equal(goods[0], goods[1])
+
+
+def test_layout_static_and_round_trip():
+    lay = sg.make_layout(PARAMS)
+    assert lay.d == sum(l.size for l in jax.tree_util.tree_leaves(PARAMS))
+    assert lay.d_padded % 128 == 0 and lay.d_padded >= lay.d
+    assert hash(lay) == hash(sg.make_layout(PARAMS))   # jit-cache friendly
+    g = honest_grads(jax.random.PRNGKey(3))
+    flat = sg.flatten_stacked(g, lay)
+    assert flat.shape == (M, lay.d_padded)
+    back = sg.unflatten_row(flat[4], lay)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b[4]), atol=1e-6), back, g)
+
+
+@pytest.mark.parametrize("m,d", [(10, 777), (8, 1024), (3, 50)])
+@pytest.mark.parametrize("reset", [0, 1])
+def test_fused_kernel_matches_oracle(m, d, reset, rng):
+    k1, k2 = jax.random.split(rng)
+    acc = jax.random.normal(k1, (m, d))
+    g = jax.random.normal(k2, (m, d))
+    new, sq = fused_accumulate_sqdist(acc, g, reset, 0.125)
+    ref_new, ref_sq = sf_ref.fused_accumulate_sqdist(acc, g, reset, 0.125)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(ref_new),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(ref_sq),
+                               atol=1e-3 * max(d, 1))
+
+
+def test_fused_kernel_reset_zeroes_nonfinite_accumulator(rng):
+    """The window reset must be a select, not multiply-by-(1-reset): a
+    Byzantine inf/NaN in the old accumulator has to vanish at the reset
+    (inf * 0 = NaN would poison distances forever)."""
+    acc = jnp.ones((8, 256)).at[2].set(jnp.inf).at[3].set(jnp.nan)
+    g = jnp.ones((8, 256))
+    new, sq = fused_accumulate_sqdist(acc, g, 1, 0.5)
+    ref_new, ref_sq = sf_ref.fused_accumulate_sqdist(acc, g, 1, 0.5)
+    assert bool(jnp.isfinite(new).all()) and bool(jnp.isfinite(sq).all())
+    np.testing.assert_allclose(np.asarray(new), np.asarray(ref_new))
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(ref_sq),
+                               atol=1e-3)
+
+
+def test_fused_kernel_explicit_block_not_dividing(rng):
+    """An explicit block_d that does not divide the lane-padded d must be
+    handled by padding, not an assert."""
+    k1, k2 = jax.random.split(rng)
+    acc = jax.random.normal(k1, (8, 1280))
+    g = jax.random.normal(k2, (8, 1280))
+    new, sq = fused_accumulate_sqdist(acc, g, 0, 0.25, block_d=512)
+    ref_new, ref_sq = sf_ref.fused_accumulate_sqdist(acc, g, 0, 0.25)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(ref_new),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(ref_sq),
+                               atol=1.3)
+
+
+def test_flat_state_shapes_and_dtype():
+    cfg = SafeguardConfig(m=M, T0=20, T1=60, threshold_floor=0.5,
+                          acc_dtype=jnp.bfloat16)
+    st = init_state(cfg, PARAMS)
+    assert st.B.shape == (M, st.layout.d_padded)
+    assert st.B.dtype == jnp.bfloat16
+    # bf16 accumulators fall back to the XLA distance path and still run
+    g = honest_grads(jax.random.PRNGKey(0))
+    st2, _, _ = jax.jit(lambda s, gr: safeguard_step(s, gr, cfg))(st, g)
+    assert st2.B.dtype == jnp.bfloat16
