@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench-quick bench-overhead lint dryrun-smoke
+.PHONY: test test-fast bench-quick bench-overhead campaign-smoke lint \
+	dryrun-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -17,6 +18,12 @@ bench-quick:
 # regenerate the committed BENCH_safeguard_overhead.json baseline
 bench-overhead:
 	$(PY) -m benchmarks.run --quick --only overhead
+
+# the CI campaign step: run the quick Table-1 grid, assert the store resumes
+campaign-smoke:
+	$(PY) -m repro.campaign.run --campaign table1 --quick --seeds 2
+	$(PY) -m repro.campaign.run --campaign table1 --quick --seeds 2 \
+	    | grep -q "new_cells=0"
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

@@ -1,0 +1,88 @@
+"""Campaign engine throughput: per-loop ``Trainer`` trials vs the
+scan+vmap engine (DESIGN.md §10) on an identical scenario slice.
+
+The baseline is ``common.run_experiment_loop`` — one jit compile and
+``steps`` python-dispatched device calls per cell, exactly what
+``table1_attack_grid`` did before the engine.  The engine path groups the
+same cells by ``engine.batch_key`` (scale variants + seeds share one
+program) and runs each group as a single scan+vmap device program.
+Trajectories are bit-identical between the two paths
+(``tests/test_campaign.py``), so this measures pure dispatch/compile
+economics, not a different computation.
+
+Writes one record to ``experiments/bench/campaign_throughput.json`` AND
+the committed repo-root baseline ``BENCH_campaign_throughput.json``
+(single source of truth — both files get the identical record;
+regenerate with ``python -m benchmarks.run --quick --only campaign``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.campaign import engine
+from repro.campaign.scenario import scenario_id
+from repro.data import tasks
+from benchmarks import common
+
+GRID_ATTACKS = ("sign_flip", "variance", "safeguard_x0.6",
+                "safeguard_x0.7")
+GRID_DEFENSE = "safeguard_double"
+
+
+def run(out_dir: str = "experiments/bench", quick: bool = False,
+        baseline_path: str = "BENCH_campaign_throughput.json"):
+    steps = 40 if quick else 60
+    seeds = 2 if quick else 3
+    task = tasks.make_teacher_task()
+    scenarios = [common.scenario_for(a, GRID_DEFENSE, steps=steps, seed=k,
+                                     task=task)
+                 for a in GRID_ATTACKS for k in range(seeds)]
+    cells = len(scenarios)
+    groups = len(engine.group_scenarios(scenarios))
+
+    t0 = time.time()
+    loop_acc = {}
+    for s in scenarios:
+        rec = common.run_experiment_loop(task, s.attack, GRID_DEFENSE,
+                                         steps=steps, seed=s.seed)
+        loop_acc[scenario_id(s)] = rec["acc"]
+    loop_wall = time.time() - t0
+
+    t0 = time.time()
+    results = engine.run_scenarios(scenarios)
+    vmap_wall = time.time() - t0
+
+    drift = max(abs(results[i]["acc"] - loop_acc[i]) for i in loop_acc)
+    record = {
+        "grid": {"attacks": list(GRID_ATTACKS), "defense": GRID_DEFENSE,
+                 "seeds": seeds, "steps": steps},
+        "cells": cells,
+        "engine_groups": groups,
+        "loop_wall_s": round(loop_wall, 2),
+        "loop_trials_per_s": round(cells / loop_wall, 3),
+        "vmap_wall_s": round(vmap_wall, 2),
+        "vmap_trials_per_s": round(cells / vmap_wall, 3),
+        "vmap_speedup": round(loop_wall / vmap_wall, 2),
+        "max_acc_drift": round(drift, 6),
+    }
+    print(f"campaign,cells,{cells}")
+    print(f"campaign,engine_groups,{groups}")
+    print(f"campaign,loop_trials_per_s,{record['loop_trials_per_s']}")
+    print(f"campaign,vmap_trials_per_s,{record['vmap_trials_per_s']}")
+    print(f"campaign,vmap_speedup,{record['vmap_speedup']}x")
+    print(f"campaign,max_acc_drift,{record['max_acc_drift']}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    for path in (os.path.join(out_dir, "campaign_throughput.json"),
+                 baseline_path):
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+            f.write("\n")
+    return record
+
+
+if __name__ == "__main__":
+    run()

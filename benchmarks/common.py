@@ -1,7 +1,17 @@
 """Shared benchmark scaffolding: the paper's experimental protocol
 (Section 5 / Appendix C) at CPU scale — m = 10 workers, alpha = 0.4,
 teacher-student task replacing ResNet-20/CIFAR (offline substitute,
-DESIGN.md §9)."""
+DESIGN.md §9).
+
+Single-cell experiments route through the campaign engine
+(``repro.campaign.engine``, DESIGN.md §10): the whole trial is one
+``lax.scan`` program instead of ~150 python-dispatched steps.
+``run_experiment_loop`` keeps the legacy per-step ``Trainer`` path — it
+is the numerics oracle the engine is tested against (bit-identical
+trajectories, ``tests/test_campaign.py``) and the per-loop baseline of
+``benchmarks/campaign_throughput.py``; it is also used whenever a
+``collect`` callback needs to observe python-side state every step.
+"""
 
 from __future__ import annotations
 
@@ -11,6 +21,10 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.campaign import engine as campaign_engine
+from repro.campaign.engine import EVAL_BATCH, EVAL_KEY
+from repro.campaign.scenario import (Scenario, TABLE1_ATTACKS,
+                                     TABLE1_DEFENSES, scenario_id)
 from repro.configs.base import TrainConfig
 from repro.core import SafeguardConfig
 from repro.core import aggregators as agg_lib
@@ -22,10 +36,9 @@ from repro.train import Trainer, init_train_state, make_train_step
 M, N_BYZ = 10, 4
 BYZ = jnp.arange(M) < N_BYZ
 
-ATTACKS = ["variance", "sign_flip", "label_flip", "delayed",
-           "safeguard_x0.6", "safeguard_x0.7"]
-DEFENSES = ["safeguard_single", "safeguard_double", "coord_median",
-            "geo_median", "krum", "zeno", "mean"]
+# canonical Table-1 grid lives in repro.campaign.scenario
+ATTACKS = list(TABLE1_ATTACKS)
+DEFENSES = list(TABLE1_DEFENSES)
 
 
 def make_defense(name: str, *, t0=20, t1=120, floor=0.1, reset_period=0):
@@ -37,10 +50,51 @@ def make_defense(name: str, *, t0=20, t1=120, floor=0.1, reset_period=0):
     return None, agg_lib.make_registry(N_BYZ, M)[name]
 
 
+def scenario_for(attack_name: str, defense_name: str, *, steps: int = 150,
+                 lr: float = 0.1, batch: int = 100, seed: int = 0,
+                 reset_period: int = 0,
+                 task: Optional[tasks.TeacherTask] = None) -> Scenario:
+    """The campaign-engine Scenario equivalent of ``run_experiment``'s
+    arguments (same task shape, windows, thresholds, rng scheme)."""
+    kw = {}
+    if task is not None:
+        kw = dict(d_in=task.d_in, d_hidden=task.d_hidden,
+                  n_classes=task.n_classes, task_seed=task.seed)
+    return Scenario(attack=attack_name, defense=defense_name, m=M,
+                    n_byz=N_BYZ, steps=steps, seed=seed, lr=lr, batch=batch,
+                    reset_period=reset_period, **kw)
+
+
 def run_experiment(task, attack_name: str, defense_name: str, *,
                    steps: int = 150, lr: float = 0.1, batch: int = 100,
                    seed: int = 0, reset_period: int = 0,
                    collect=None) -> Dict:
+    """One grid cell.  Engine path (scan-rolled trial) unless a
+    ``collect`` callback needs per-step python visibility."""
+    if collect is not None:
+        return run_experiment_loop(task, attack_name, defense_name,
+                                   steps=steps, lr=lr, batch=batch,
+                                   seed=seed, reset_period=reset_period,
+                                   collect=collect)
+    scn = scenario_for(attack_name, defense_name, steps=steps, lr=lr,
+                       batch=batch, seed=seed, reset_period=reset_period,
+                       task=task)
+    t0_wall = time.time()
+    rec = campaign_engine.run_scenarios([scn])[scenario_id(scn)]
+    out = {"attack": attack_name, "defense": defense_name,
+           "acc": rec["acc"], "steps": steps,
+           "wall_s": round(time.time() - t0_wall, 2)}
+    for k in ("caught_byz", "evicted_honest"):
+        if k in rec:
+            out[k] = rec[k]
+    return out
+
+
+def run_experiment_loop(task, attack_name: str, defense_name: str, *,
+                        steps: int = 150, lr: float = 0.1, batch: int = 100,
+                        seed: int = 0, reset_period: int = 0,
+                        collect=None) -> Dict:
+    """Legacy per-trial ``Trainer`` path: one jit, python-loop steps."""
     attack = atk_lib.make_registry(delay=32)[attack_name]
     sg_cfg, aggregator = make_defense(defense_name,
                                       reset_period=reset_period)
@@ -69,7 +123,8 @@ def run_experiment(task, attack_name: str, defense_name: str, *,
                 tr.state, metrics = tr.step_fn(tr.state, b)
             collect(i, tr.state, metrics)
     wall = time.time() - t0_wall
-    eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(10_000), 4000)
+    eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(EVAL_KEY),
+                                 EVAL_BATCH)
     acc = float(tasks.mlp_accuracy(tr.state.params, eval_b))
     out = {"attack": attack_name, "defense": defense_name, "acc": acc,
            "steps": steps, "wall_s": round(wall, 2)}
@@ -93,5 +148,6 @@ def ideal_accuracy(task, *, steps=150, lr=0.1, batch=60, seed=0) -> float:
     it = tasks.teacher_batches(task, batch, seed=seed, m=mh)
     tr = Trainer(state, step, it, log_every=10 ** 9, name="ideal")
     tr.run(steps, verbose=False)
-    eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(10_000), 4000)
+    eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(EVAL_KEY),
+                                 EVAL_BATCH)
     return float(tasks.mlp_accuracy(tr.state.params, eval_b))

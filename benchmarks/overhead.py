@@ -22,10 +22,12 @@ asserted:
                        (the TPU hot path; pays a flatten on CPU)
   safeguard_sketch     CountSketch O(m r k) state (beyond paper)
 
-Writes ``experiments/bench/overhead.json`` plus the committed repo-root
-baseline ``BENCH_safeguard_overhead.json`` (safeguard rows + flat-vs-
-stacked speedups; regenerate with ``python -m benchmarks.run --quick
---only overhead``).
+Builds ONE record (raw rows + per-d safeguard entries with flat-vs-
+stacked speedups) and writes it identically to
+``experiments/bench/overhead.json`` and the committed repo-root baseline
+``BENCH_safeguard_overhead.json`` — a single source of truth, never two
+diverging formats.  Regenerate with ``python -m benchmarks.run --quick
+--only overhead``.
 """
 
 from __future__ import annotations
@@ -108,21 +110,24 @@ def run(out_dir: str = "experiments/bench", quick: bool = False,
             rows.append({"defense": variant, "d": d, "us_per_call": us})
             print(f"overhead,{variant},d={d},{us:.1f}us")
 
+    record = _build_record(rows)
     os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, "overhead.json"), "w") as f:
-        json.dump(rows, f, indent=1)
-
-    _write_baseline(rows, baseline_path)
+    for path in (os.path.join(out_dir, "overhead.json"), baseline_path):
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+            f.write("\n")
     return rows
 
 
-def _write_baseline(rows, path):
-    """Repo-root safeguard baseline: per-d cost of each representation and
-    the flat-vs-stacked speedup (the tentpole's measured claim)."""
+def _build_record(rows):
+    """The single overhead record: raw measurements plus per-d safeguard
+    entries with the flat-vs-stacked speedup (the §6 measured claim).
+    Written verbatim to BOTH the experiments artifact and the committed
+    repo-root baseline."""
     by = {(r["defense"], r["d"]): r["us_per_call"] for r in rows}
     ds = sorted({r["d"] for r in rows})
-    base = {"m": M, "n_layers": N_LAYERS, "unit": "us_per_call",
-            "entries": []}
+    record = {"m": M, "n_layers": N_LAYERS, "unit": "us_per_call",
+              "rows": rows, "entries": []}
     for d in ds:
         entry = {"d": d}
         for variant, _ in SAFEGUARD_VARIANTS:
@@ -134,10 +139,8 @@ def _write_baseline(rows, path):
             entry["flat_speedup_vs_stacked"] = round(stacked / flat, 2)
             print(f"overhead,flat_speedup_vs_stacked,d={d},"
                   f"{stacked / flat:.2f}x")
-        base["entries"].append(entry)
-    with open(path, "w") as f:
-        json.dump(base, f, indent=1)
-        f.write("\n")
+        record["entries"].append(entry)
+    return record
 
 
 if __name__ == "__main__":

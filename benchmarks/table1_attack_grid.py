@@ -7,39 +7,85 @@ qualitative claims being validated:
   * the variance attack collapses historyless defenses;
   * label flipping is mild; the x0.6 safeguard attack degrades the
     safeguard a little but degrades baselines far more.
+
+The grid runs through the campaign engine (DESIGN.md §10): scenarios
+sharing a program structure (all scale variants of the safeguard attack,
+all seeds) become vmap lanes, so the 6x7 grid with ``seeds`` replicas is
+a handful of device programs instead of ``42 * seeds`` python trials.
+Rows carry ``acc_mean``/``acc_std`` over seeds; ``acc`` stays the mean
+for back-compat with the single-seed json contract.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import statistics
+from typing import Dict, List, Sequence, Tuple
 
+from repro.campaign import engine
+from repro.campaign.scenario import Scenario, scenario_id
 from repro.data import tasks
 from benchmarks import common
 
 
-def run(steps: int = 150, out_dir: str = "experiments/bench"):
+def build_rows(scenarios: Sequence[Scenario],
+               results: Dict[str, Dict]) -> List[Dict]:
+    """Collapse per-seed engine results into one row per (attack,
+    defense), keyed explicitly — never by row order — with multi-seed
+    accuracy statistics."""
+    by_cell: Dict[Tuple[str, str], List[Dict]] = {}
+    for s in scenarios:
+        by_cell.setdefault((s.attack, s.defense), []).append(
+            results[scenario_id(s)])
+    rows = []
+    for (attack, defense), recs in by_cell.items():
+        accs = [float(r["acc"]) for r in recs]
+        mean = statistics.fmean(accs)
+        std = statistics.pstdev(accs) if len(accs) > 1 else 0.0
+        row = {"attack": attack, "defense": defense, "acc": mean,
+               "acc_mean": mean, "acc_std": std, "seeds": len(accs)}
+        if "caught_byz" in recs[0]:
+            row["caught_byz"] = max(r["caught_byz"] for r in recs)
+            row["evicted_honest"] = max(r["evicted_honest"] for r in recs)
+        rows.append(row)
+    return rows
+
+
+def run(steps: int = 150, out_dir: str = "experiments/bench",
+        seeds: int = 1):
     task = tasks.make_teacher_task()
     ideal = common.ideal_accuracy(task, steps=steps)
-    rows = []
+    scenarios = [common.scenario_for(a, d, steps=steps, seed=k, task=task)
+                 for a in common.ATTACKS for d in common.DEFENSES
+                 for k in range(seeds)]
+    results = engine.run_scenarios(scenarios, verbose=True)
+    rows = build_rows(scenarios, results)
+    cells = {(r["attack"], r["defense"]): r for r in rows}
     for attack in common.ATTACKS:
         for defense in common.DEFENSES:
-            rec = common.run_experiment(task, attack, defense, steps=steps)
-            rows.append(rec)
-            print(f"table1,{attack},{defense},{rec['acc']:.4f},"
-                  f"caught={rec.get('caught_byz', '-')}")
+            r = cells[(attack, defense)]
+            print(f"table1,{attack},{defense},{r['acc']:.4f},"
+                  f"caught={r.get('caught_byz', '-')}")
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "table1.json"), "w") as f:
-        json.dump({"ideal": ideal, "rows": rows}, f, indent=1)
+        json.dump({"ideal": ideal, "seeds": seeds, "rows": rows}, f,
+                  indent=1)
 
-    # markdown table
+    # markdown table — mean±std over seeds
     print(f"\nideal accuracy (honest-only SGD): {ideal:.4f}\n")
     header = "| attack | " + " | ".join(common.DEFENSES) + " |"
     print(header)
     print("|" + "---|" * (len(common.DEFENSES) + 1))
     for attack in common.ATTACKS:
-        cells = [f"{r['acc']:.3f}" for r in rows if r["attack"] == attack]
-        print(f"| {attack} | " + " | ".join(cells) + " |")
+        parts = []
+        for defense in common.DEFENSES:
+            r = cells[(attack, defense)]
+            if seeds > 1:
+                parts.append(f"{r['acc_mean']:.3f}±{r['acc_std']:.3f}")
+            else:
+                parts.append(f"{r['acc']:.3f}")
+        print(f"| {attack} | " + " | ".join(parts) + " |")
     return rows
 
 

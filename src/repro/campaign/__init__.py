@@ -1,0 +1,13 @@
+"""Campaign engine: vmapped multi-seed scenario subsystem (DESIGN.md §10).
+
+Layers: ``scenario`` (declarative grid cells, content-hashed),
+``engine`` (scan-rolled trials vmapped over seed/knob axes),
+``store`` (resumable JSONL result store), ``run`` (CLI + built-in
+campaign definitions).
+"""
+
+from repro.campaign.scenario import (    # noqa: F401
+    Scenario, scenario_id, expand_grid, with_seeds)
+from repro.campaign.engine import (      # noqa: F401
+    batch_key, group_scenarios, run_scenarios)
+from repro.campaign.store import CampaignStore    # noqa: F401

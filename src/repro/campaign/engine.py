@@ -1,0 +1,262 @@
+"""Batched trial engine: one device program per scenario *family*.
+
+The legacy path (``benchmarks/common.run_experiment_loop``) runs one jit
+and ~150 python-dispatched steps per grid cell.  The engine instead:
+
+1. rolls a whole trial into one ``lax.scan`` (``train.trainer.scan_trial``
+   — the step carry already threads optimizer/safeguard/attack state, and
+   the seeded synthetic data pipeline regenerates each batch inside the
+   scan body from the step index, bit-compatible with the python
+   iterators in ``repro.data``);
+2. ``vmap``s the trial over every scenario axis that is a *traced knob*
+   rather than program structure — the seed axis always, plus
+   ``attack_scale`` (all ``scaled_flip``/``safeguard_x*`` variants),
+   ``threshold_floor`` (safeguard defenses) and ``n_byz`` (defenses whose
+   aggregator does not consume b statically);
+3. groups scenarios by :func:`batch_key` — everything that changes the
+   traced program (attack family, defense, m, steps, windows, task shape)
+   — so a 6x7x5-seed Table-1 grid compiles ~35 programs instead of
+   dispatching ~200 python trials.
+
+Which axes may share a program: two scenarios batch together iff their
+``batch_key`` matches, i.e. they differ only in the four knobs above.
+``krum``/``trimmed_mean``/``zeno`` consume ``n_byz`` as a static python
+value (slice bounds), so for those defenses ``n_byz`` is part of the key
+instead of a knob.
+
+Per-step metric traces (loss, good-set size, caught-Byzantine count, ...)
+come out of the scan stacked on device, so multi-seed statistics and the
+Fig-2 trajectories are one ``device_get`` away.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.campaign.scenario import Scenario, scenario_id
+from repro.configs.base import TrainConfig
+from repro.core import SafeguardConfig
+from repro.core import aggregators as agg_lib
+from repro.core import attacks as atk_lib
+from repro.data import tasks
+from repro.data.pipeline import flip_labels, worker_split
+from repro.optim import make_optimizer
+from repro.train import init_train_state, make_train_step, scan_trial
+
+# Aggregators that consume n_byz as a static python value (slice/selection
+# bounds) — n_byz is program structure for them, a vmap knob otherwise.
+STATIC_NBYZ_DEFENSES = frozenset({"trimmed_mean", "krum", "zeno"})
+
+EVAL_BATCH = 4000            # final-accuracy eval batch (common.py protocol)
+EVAL_KEY = 10_000
+
+
+def attack_family(s: Scenario) -> Tuple[str, float]:
+    """Normalize the attack name to (family, scale): ``safeguard_x0.6`` ->
+    ``("scaled_flip", 0.6)`` so all scale variants share one program."""
+    if s.attack.startswith("safeguard_x"):
+        return "scaled_flip", float(s.attack[len("safeguard_x"):])
+    if s.attack == "scaled_flip":
+        return "scaled_flip", float(s.attack_scale)
+    return s.attack, 0.0
+
+
+def batch_key(s: Scenario) -> Tuple:
+    """Scenarios with equal keys run as lanes of one vmapped program."""
+    fam, _ = attack_family(s)
+    return (fam, s.defense, s.m, s.steps, s.lr, s.batch, s.optimizer,
+            s.momentum, s.T0, s.T1, s.reset_period, s.delay, s.burst_start,
+            s.burst_length, s.d_in, s.d_hidden, s.n_classes, s.task_seed,
+            s.n_byz if s.defense in STATIC_NBYZ_DEFENSES else None)
+
+
+def _build_attack(family: str, rep: Scenario, scale) -> atk_lib.Attack:
+    """Instantiate the attack; ``scale`` may be a traced scalar (the
+    scaled_flip closure only does arithmetic with it)."""
+    if family == "scaled_flip":
+        return atk_lib.Attack("scaled_flip", atk_lib.make_scaled_flip(scale))
+    if family == "delayed":
+        fn = atk_lib.make_delayed(rep.delay)
+        return atk_lib.Attack("delayed", fn, init=fn.init)
+    if family == "burst":
+        return atk_lib.Attack("burst", atk_lib.make_burst(
+            rep.burst_start, rep.burst_length, 5.0))
+    registry = atk_lib.make_registry(delay=rep.delay,
+                                     burst_start=rep.burst_start,
+                                     burst_length=rep.burst_length)
+    if family not in registry:
+        raise ValueError(f"unknown attack {family!r}")
+    return registry[family]
+
+
+def _build_defense(rep: Scenario, floor):
+    """-> (sg_cfg, aggregator); ``floor`` may be a traced scalar — it only
+    feeds the empirical filter's ``scale * max(S, floor)`` arithmetic."""
+    if rep.defense.startswith("safeguard"):
+        mode = "single" if rep.defense.endswith("single") else "double"
+        return SafeguardConfig(m=rep.m, T0=rep.T0, T1=rep.T1, mode=mode,
+                               threshold_floor=floor,
+                               reset_period=rep.reset_period), None
+    reg = agg_lib.make_registry(rep.n_byz, rep.m)
+    if rep.defense not in reg:
+        raise ValueError(f"unknown defense {rep.defense!r}")
+    return None, reg[rep.defense]
+
+
+def make_trial_fn(rep: Scenario):
+    """Build ``trial(knobs) -> result`` for the family ``rep`` represents.
+
+    ``knobs`` is a dict of four scalars (``seed``, ``attack_scale``,
+    ``threshold_floor``, ``n_byz``) — the vmappable axes.  Everything else
+    about ``rep`` is baked into the traced program, which is why only
+    scenarios sharing :func:`batch_key` may be stacked into one call.
+    """
+    family, _ = attack_family(rep)
+    task = tasks.make_teacher_task(rep.d_in, rep.d_hidden, rep.n_classes,
+                                   seed=rep.task_seed)
+    opt = make_optimizer(TrainConfig(lr=rep.lr, momentum=rep.momentum,
+                                     optimizer=rep.optimizer))
+    data_attack = family == "label_flip"
+    dynamic_nbyz = rep.defense not in STATIC_NBYZ_DEFENSES
+
+    def trial(knobs):
+        seed = knobs["seed"]
+        n_byz = knobs["n_byz"] if dynamic_nbyz else rep.n_byz
+        byz_mask = jnp.arange(rep.m) < n_byz
+        attack = _build_attack(family, rep, knobs["attack_scale"])
+        sg_cfg, aggregator = _build_defense(rep, knobs["threshold_floor"])
+
+        params = tasks.student_init(task, seed=seed + 1)
+        state = init_train_state(params, opt, sg_cfg=sg_cfg, attack=attack,
+                                 seed=seed)
+        step_fn = make_train_step(tasks.mlp_loss, opt, byz_mask=byz_mask,
+                                  sg_cfg=sg_cfg, aggregator=aggregator,
+                                  attack=attack, jit=False)
+
+        # In-scan data generation, bit-compatible with the python
+        # iterator ``tasks.teacher_batches(task, batch, seed, m, flip)``.
+        def batch_fn(t):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0xDA7A), t)
+            out = worker_split(tasks.teacher_batch(task, key, rep.batch),
+                               rep.m)
+            if data_attack:
+                flipped = flip_labels(out["y"], rep.n_classes)
+                sel = byz_mask.reshape((rep.m, 1))
+                out = {"x": out["x"], "y": jnp.where(sel, flipped, out["y"])}
+            return out
+
+        held_fn = None
+        if aggregator is not None and aggregator.needs_scores:
+            def held_fn(t):  # noqa: E306 — teacher_batches(task, 10, seed+7)
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey((seed + 7) ^ 0xDA7A), t)
+                return tasks.teacher_batch(task, key, 10)
+
+        final, traces = scan_trial(step_fn, state, batch_fn=batch_fn,
+                                   steps=rep.steps, held_fn=held_fn)
+
+        eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(EVAL_KEY),
+                                     EVAL_BATCH)
+        out = {"acc": tasks.mlp_accuracy(final.params, eval_b),
+               "traces": traces}
+        if sg_cfg is not None:
+            good = final.sg_state.good
+            out["final_good"] = good
+            out["caught_byz"] = (byz_mask & ~good).sum()
+            out["evicted_honest"] = (~byz_mask & ~good).sum()
+        return out
+
+    return trial
+
+
+def stack_knobs(group: Sequence[Scenario]) -> Dict[str, jax.Array]:
+    return {
+        "seed": jnp.asarray([s.seed for s in group], jnp.int32),
+        "attack_scale": jnp.asarray([attack_family(s)[1] for s in group],
+                                    jnp.float32),
+        "threshold_floor": jnp.asarray([s.threshold_floor for s in group],
+                                       jnp.float32),
+        "n_byz": jnp.asarray([s.n_byz for s in group], jnp.int32),
+    }
+
+
+def group_scenarios(scenarios: Sequence[Scenario]
+                    ) -> List[List[Scenario]]:
+    """Partition by :func:`batch_key`, preserving first-seen order."""
+    groups: Dict[Tuple, List[Scenario]] = {}
+    for s in scenarios:
+        groups.setdefault(batch_key(s), []).append(s)
+    return list(groups.values())
+
+
+def _lane_record(lane: Dict) -> Dict:
+    """One host-side trial output pytree -> result record."""
+    rec = {"acc": float(lane["acc"])}
+    for k in ("caught_byz", "evicted_honest"):
+        if k in lane:
+            rec[k] = int(lane[k])
+    if "final_good" in lane:
+        rec["final_good"] = lane["final_good"]
+    rec["traces"] = lane["traces"]
+    return rec
+
+
+def _split_lanes(out, n: int) -> List[Dict]:
+    """(lane-stacked result pytree) -> per-lane host-side dicts."""
+    host = jax.device_get(out)
+    return [_lane_record(jax.tree.map(lambda x: x[i], host))
+            for i in range(n)]
+
+
+def run_group(group: Sequence[Scenario], *, batched: bool = True
+              ) -> List[Dict]:
+    """Run one batch-compatible scenario group -> per-scenario results.
+
+    ``batched=False`` runs the same trial function one lane at a time
+    (the unbatched oracle the vmap equivalence tests compare against).
+    """
+    rep = group[0]
+    trial = make_trial_fn(rep)
+    knobs = stack_knobs(group)
+    if batched:
+        out = jax.jit(jax.vmap(trial))(knobs)
+        jax.block_until_ready(out)
+        return _split_lanes(out, len(group))
+    fn = jax.jit(trial)
+    lanes = []
+    for i in range(len(group)):
+        one = fn({k: v[i] for k, v in knobs.items()})
+        jax.block_until_ready(one)
+        lanes.append(_lane_record(jax.device_get(one)))
+    return lanes
+
+
+def run_scenarios(scenarios: Sequence[Scenario], *, batched: bool = True,
+                  verbose: bool = False) -> Dict[str, Dict]:
+    """Run a scenario list -> ``{scenario_id: result}``.
+
+    Results carry ``acc`` (final eval accuracy), the safeguard diagnostics
+    (``caught_byz`` / ``evicted_honest`` / ``final_good``) when the
+    defense is stateful, ``traces`` (per-step metric stacks), and
+    ``wall_s`` for the group the scenario ran in.
+    """
+    results: Dict[str, Dict] = {}
+    for group in group_scenarios(scenarios):
+        t0 = time.time()
+        lanes = run_group(group, batched=batched)
+        wall = time.time() - t0
+        if verbose:
+            fam, _ = attack_family(group[0])
+            print(f"campaign-engine,{fam}/{group[0].defense},"
+                  f"lanes={len(group)},wall_s={wall:.2f}")
+        for s, rec in zip(group, lanes):
+            rec = dict(rec)
+            rec["wall_s"] = wall
+            rec["group_lanes"] = len(group)
+            results[scenario_id(s)] = rec
+    return results

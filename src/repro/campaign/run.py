@@ -1,0 +1,128 @@
+"""Campaign CLI: declarative grids -> batched engine -> resumable store.
+
+    PYTHONPATH=src python -m repro.campaign.run --campaign table1 --seeds 5
+
+Built-in campaigns (all multi-seed; the engine turns seeds and compatible
+knob axes into vmap lanes, see ``engine.batch_key``):
+
+  table1           paper Table 1: attack x defense grid
+  fig2             paper Fig 2(b): variance attack x periodic reset
+  alpha_sweep      n_byz 0..4 (alpha 0..0.4) x {variance, sign_flip}
+                   x {safeguard_double, coord_median}
+  threshold_sweep  safeguard threshold_floor sweep under the variance
+                   attack (single + double guard) — one program per
+                   defense, every floor a vmap lane
+  smoke            2x2 mini-grid for CI / tests
+
+A second invocation with the same arguments runs 0 new cells (the store
+is keyed by scenario content hash); extending ``--seeds`` or a campaign's
+axis lists only runs the delta.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, Dict, List
+
+from repro.campaign import engine
+from repro.campaign.scenario import (Scenario, TABLE1_ATTACKS,
+                                     TABLE1_DEFENSES, expand_grid,
+                                     scenario_id, with_seeds)
+from repro.campaign.store import DEFAULT_ROOT, CampaignStore
+
+
+def _table1(seeds: int, steps: int) -> List[Scenario]:
+    grid = expand_grid(attack=list(TABLE1_ATTACKS),
+                       defense=list(TABLE1_DEFENSES), steps=[steps])
+    return with_seeds(grid, seeds)
+
+
+def _fig2(seeds: int, steps: int) -> List[Scenario]:
+    grid = expand_grid(attack=["variance"], defense=["safeguard_double"],
+                       reset_period=[0, 40, 80], steps=[steps])
+    return with_seeds(grid, seeds)
+
+
+def _alpha_sweep(seeds: int, steps: int) -> List[Scenario]:
+    grid = expand_grid(attack=["variance", "sign_flip"],
+                       defense=["safeguard_double", "coord_median"],
+                       n_byz=[0, 1, 2, 3, 4], steps=[steps])
+    return with_seeds(grid, seeds)
+
+
+def _threshold_sweep(seeds: int, steps: int) -> List[Scenario]:
+    grid = expand_grid(attack=["variance"],
+                       defense=["safeguard_single", "safeguard_double"],
+                       threshold_floor=[0.05, 0.1, 0.3, 1.0, 3.0],
+                       steps=[steps])
+    return with_seeds(grid, seeds)
+
+
+def _smoke(seeds: int, steps: int) -> List[Scenario]:
+    grid = expand_grid(attack=["sign_flip", "variance"],
+                       defense=["safeguard_double", "coord_median"],
+                       steps=[steps])
+    return with_seeds(grid, seeds)
+
+
+CAMPAIGNS: Dict[str, Callable[[int, int], List[Scenario]]] = {
+    "table1": _table1,
+    "fig2": _fig2,
+    "alpha_sweep": _alpha_sweep,
+    "threshold_sweep": _threshold_sweep,
+    "smoke": _smoke,
+}
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser(
+        description="run a scenario campaign through the batched engine")
+    ap.add_argument("--campaign", required=True, choices=sorted(CAMPAIGNS))
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="steps per trial (default 150; --quick default 40)")
+    ap.add_argument("--quick", action="store_true",
+                    help="short trials (40 steps unless --steps is given)")
+    ap.add_argument("--root", default=DEFAULT_ROOT,
+                    help="store root (experiments/campaigns)")
+    ap.add_argument("--store-traces", action="store_true",
+                    help="persist per-step metric traces in the store")
+    ap.add_argument("--loop", action="store_true",
+                    help="run lanes unbatched (debugging / A-B timing)")
+    args = ap.parse_args(argv)
+
+    steps = args.steps if args.steps is not None else (40 if args.quick
+                                                       else 150)
+    scenarios = CAMPAIGNS[args.campaign](args.seeds, steps)
+    store = CampaignStore(args.campaign, root=args.root)
+    pending = store.pending(scenarios)
+    done = len(scenarios) - len(pending)
+    print(f"campaign,{args.campaign},cells={len(scenarios)},done={done},"
+          f"new_cells={len(pending)}")
+
+    t0 = time.time()
+    if pending:
+        n_groups = len(engine.group_scenarios(pending))
+        print(f"campaign,{args.campaign},groups={n_groups}")
+        results = engine.run_scenarios(pending, batched=not args.loop,
+                                       verbose=True)
+        for s in pending:
+            rec = results[scenario_id(s)]
+            store.append(s, rec, store_traces=args.store_traces)
+            caught = rec.get("caught_byz", "-")
+            print(f"campaign,{args.campaign},{s.attack},{s.defense},"
+                  f"seed={s.seed},acc={rec['acc']:.4f},caught={caught}")
+    wall = time.time() - t0
+    store.write_meta({"campaign": args.campaign, "seeds": args.seeds,
+                      "steps": steps, "cells": len(scenarios),
+                      "last_new_cells": len(pending),
+                      "last_wall_s": round(wall, 2)})
+    print(f"campaign,{args.campaign},ran={len(pending)},"
+          f"wall_s={wall:.1f},store={store.path}")
+    return {"cells": len(scenarios), "ran": len(pending), "wall_s": wall,
+            "store": store.path}
+
+
+if __name__ == "__main__":
+    main()

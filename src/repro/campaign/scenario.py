@@ -1,0 +1,111 @@
+"""Declarative scenario grid for the campaign engine.
+
+A :class:`Scenario` is one cell of the paper's evaluation grid — attack x
+defense x alpha x seed plus every knob that changes the trajectory
+(optimizer, windows, thresholds, task shape).  It is frozen, fully
+JSON-serializable, and content-addressed: :func:`scenario_id` hashes the
+field dict, so the resumable store (``repro.campaign.store``) can skip
+cells that already ran and a grid extended with new attacks/defenses only
+runs the delta.
+
+Grid helpers:
+
+* :func:`expand_grid` — cartesian product over axis lists
+  (``expand_grid(attack=ATTACKS, defense=DEFENSES, seed=range(5))``);
+* :func:`with_seeds` — replicate a scenario list over ``n`` seeds.
+
+The attack/defense *names* are the registry names of ``core.attacks`` /
+``core.aggregators`` plus the ``safeguard_*`` defense family; the
+``safeguard_x<scale>`` attacks normalize to the ``scaled_flip`` family
+with a numeric ``attack_scale`` so the engine can batch them into one
+vmapped program (``engine.batch_key``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+from typing import Dict, Iterable, List, Sequence
+
+# The paper's Table 1 grid (Section 5 / Appendix C) — canonical lists,
+# re-exported by benchmarks.common for back-compat.
+TABLE1_ATTACKS = ("variance", "sign_flip", "label_flip", "delayed",
+                  "safeguard_x0.6", "safeguard_x0.7")
+TABLE1_DEFENSES = ("safeguard_single", "safeguard_double", "coord_median",
+                   "geo_median", "krum", "zeno", "mean")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One evaluation cell.  Defaults mirror the CPU-scale protocol of
+    ``benchmarks/common.py`` (m=10, alpha=0.4, teacher-student task)."""
+    attack: str
+    defense: str
+    # population
+    m: int = 10
+    n_byz: int = 4
+    # trial length / optimization
+    steps: int = 150
+    seed: int = 0
+    lr: float = 0.1
+    batch: int = 100
+    optimizer: str = "sgd"
+    momentum: float = 0.0
+    # safeguard knobs (ignored for baseline aggregator defenses)
+    T0: int = 20
+    T1: int = 120
+    threshold_floor: float = 0.1
+    reset_period: int = 0
+    # attack knobs
+    attack_scale: float = 0.0     # scaled_flip family; 0 -> from the name
+    delay: int = 32               # delayed attack circular-buffer length
+    burst_start: int = 200
+    burst_length: int = 50
+    # teacher-student task shape
+    d_in: int = 32
+    d_hidden: int = 64
+    n_classes: int = 10
+    task_seed: int = 0
+
+    def asdict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def scenario_id(s: Scenario) -> str:
+    """Stable content hash of the scenario — the store key."""
+    blob = json.dumps(s.asdict(), sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def expand_grid(base: Scenario | None = None, **axes: Sequence) -> List[Scenario]:
+    """Cartesian product over ``axes`` (field name -> list of values),
+    starting from ``base`` (or field defaults).  Axis order follows the
+    kwargs, so the first axis varies slowest — deterministic cell order.
+
+    ``expand_grid(attack=["variance"], defense=TABLE1_DEFENSES,
+    seed=range(5))`` -> 35 scenarios.
+    """
+    names = list(axes)
+    for name in names:
+        if name not in Scenario.__dataclass_fields__:
+            raise ValueError(f"unknown Scenario field {name!r}")
+    out = []
+    for combo in itertools.product(*(axes[n] for n in names)):
+        fields = dict(zip(names, combo))
+        if base is None:
+            if "attack" not in fields or "defense" not in fields:
+                raise ValueError("grid without a base scenario needs "
+                                 "attack and defense axes")
+            out.append(Scenario(**fields))
+        else:
+            out.append(dataclasses.replace(base, **fields))
+    return out
+
+
+def with_seeds(scenarios: Iterable[Scenario], n_seeds: int) -> List[Scenario]:
+    """Replicate every scenario over seeds ``0..n_seeds-1`` (the engine
+    turns the seed axis into vmap lanes, so replication is nearly free)."""
+    return [dataclasses.replace(s, seed=k)
+            for s in scenarios for k in range(n_seeds)]

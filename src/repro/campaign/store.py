@@ -1,0 +1,106 @@
+"""Resumable campaign result store.
+
+One directory per campaign under ``experiments/campaigns/<name>/``:
+
+  meta.json       campaign name + last launch parameters (informational)
+  results.jsonl   one line per completed cell:
+                  {"id": <scenario hash>, "scenario": {...}, "result": {...}}
+
+The store is content-addressed by :func:`scenario.scenario_id`, so
+
+* re-running a campaign skips every completed cell (``pending`` filters
+  against ``completed_ids``);
+* extending the grid (new attacks, defenses, seeds, knob values) only
+  runs the delta — new cells hash to new ids;
+* the file is append-only and crash-safe per line: a partially-written
+  trailing line (killed run) is ignored on load, and duplicate ids keep
+  the last record.
+
+Result payloads are scalars by default; per-step traces are optional
+(``store_traces=True`` on :meth:`CampaignStore.append`) since a trace is
+``steps`` floats per metric per cell.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.campaign.scenario import Scenario, scenario_id
+
+DEFAULT_ROOT = os.path.join("experiments", "campaigns")
+
+
+def _jsonify(x):
+    """numpy / jax scalars and arrays -> plain json types."""
+    if isinstance(x, dict):
+        return {k: _jsonify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonify(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return _jsonify(x.tolist())
+    if isinstance(x, (np.bool_, bool)):
+        return bool(x)
+    if isinstance(x, (np.integer, int)):
+        return int(x)
+    if isinstance(x, (np.floating, float)):
+        return float(x)
+    if hasattr(x, "tolist"):          # jax arrays
+        return _jsonify(np.asarray(x).tolist())
+    return x
+
+
+class CampaignStore:
+    def __init__(self, name: str, root: str = DEFAULT_ROOT):
+        self.name = name
+        self.dir = os.path.join(root, name)
+        self.path = os.path.join(self.dir, "results.jsonl")
+        os.makedirs(self.dir, exist_ok=True)
+
+    # -- reading -----------------------------------------------------------
+
+    def load(self) -> Dict[str, Dict]:
+        """id -> record; tolerates a torn trailing line, last record wins."""
+        records: Dict[str, Dict] = {}
+        if not os.path.exists(self.path):
+            return records
+        with open(self.path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue                     # torn write from a kill
+                if "id" in rec:
+                    records[rec["id"]] = rec
+        return records
+
+    def completed_ids(self) -> set:
+        return set(self.load())
+
+    def pending(self, scenarios: Sequence[Scenario]) -> List[Scenario]:
+        done = self.completed_ids()
+        return [s for s in scenarios if scenario_id(s) not in done]
+
+    # -- writing -----------------------------------------------------------
+
+    def append(self, scenario: Scenario, result: Dict, *,
+               store_traces: bool = False) -> str:
+        sid = scenario_id(scenario)
+        payload = {k: v for k, v in result.items()
+                   if k != "traces" or store_traces}
+        rec = {"id": sid, "scenario": scenario.asdict(),
+               "result": _jsonify(payload)}
+        with open(self.path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        return sid
+
+    def write_meta(self, meta: Dict) -> None:
+        with open(os.path.join(self.dir, "meta.json"), "w") as f:
+            json.dump(_jsonify(meta), f, indent=1)
+            f.write("\n")

@@ -1,3 +1,4 @@
 from repro.train.trainer import (   # noqa: F401
-    TrainState, init_train_state, make_train_step, Trainer, zeno_scores)
+    TrainState, init_train_state, make_train_step, scan_trial, Trainer,
+    zeno_scores)
 from repro.train.serve import generate   # noqa: F401

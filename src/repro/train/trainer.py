@@ -18,7 +18,11 @@ master/worker protocol in SPMD form:
   4. the optimizer update.
 
 ``Trainer`` wraps the step with a plain python loop, metric collection and
-checkpointing for the benchmarks/examples.
+checkpointing for the benchmarks/examples.  ``scan_trial`` rolls an entire
+trial (data generation + step) into one ``lax.scan`` so a full training
+run is a single device program — the campaign engine
+(``repro.campaign.engine``) builds on it to ``vmap`` whole trials over
+seeds and scenario knobs.
 """
 
 from __future__ import annotations
@@ -157,6 +161,40 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
         return new_state, metrics
 
     return jax.jit(step_fn) if jit else step_fn
+
+
+def scan_trial(step_fn, state: TrainState, *, batch_fn, steps: int,
+               held_fn=None, trace_fields=None):
+    """Roll a whole training trial into one ``lax.scan``.
+
+    ``step_fn`` must be the *unjitted* step (``make_train_step(...,
+    jit=False)``) — its carry (:class:`TrainState`) already threads the
+    optimizer, safeguard and attack state pytrees, which is exactly what
+    makes the loop body scan-able (and, one level up, vmap-able over
+    seeds/scenario knobs).
+
+    ``batch_fn(t) -> worker batch`` and ``held_fn(t) -> held-out batch``
+    regenerate the data *inside* the scan body from the step index — they
+    must be pure jax functions (the seeded synthetic pipelines in
+    ``repro.data`` are; see ``teacher_batches``'s fold_in scheme).
+
+    ``trace_fields``: optional subset of metric names to stack over the
+    step axis (default: all metrics the step emits).
+
+    Returns ``(final_state, traces)`` with each trace leaf shaped
+    ``(steps, ...)``.
+    """
+    def body(st, t):
+        batch = batch_fn(t)
+        if held_fn is not None:
+            st, metrics = step_fn(st, batch, held_fn(t))
+        else:
+            st, metrics = step_fn(st, batch)
+        if trace_fields is not None:
+            metrics = {k: metrics[k] for k in trace_fields}
+        return st, metrics
+
+    return jax.lax.scan(body, state, jnp.arange(steps))
 
 
 class Trainer:

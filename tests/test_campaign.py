@@ -1,0 +1,197 @@
+"""Campaign subsystem (DESIGN.md §10): scenario hashing, grid expansion,
+batch grouping, engine-vs-Trainer equivalence (bit-for-bit), stateful
+attacks under vmap, knob-axis batching, and the resumable store."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.campaign import engine
+from repro.campaign import run as campaign_run
+from repro.campaign.scenario import (Scenario, expand_grid, scenario_id,
+                                     with_seeds)
+from repro.campaign.store import CampaignStore
+from repro.data import tasks
+from benchmarks import common
+from benchmarks import table1_attack_grid
+
+
+# ---------------------------------------------------------------- scenario
+
+
+def test_scenario_id_stable_and_unique():
+    a = Scenario(attack="sign_flip", defense="mean")
+    b = Scenario(attack="sign_flip", defense="mean")
+    assert scenario_id(a) == scenario_id(b)
+    ids = {scenario_id(s) for s in (
+        a,
+        dataclasses.replace(a, seed=1),
+        dataclasses.replace(a, threshold_floor=0.2),
+        dataclasses.replace(a, attack="variance"),
+        dataclasses.replace(a, n_byz=3),
+    )}
+    assert len(ids) == 5
+
+
+def test_expand_grid_and_seeds():
+    grid = expand_grid(attack=["a1", "a2"], defense=["d1", "d2", "d3"])
+    assert len(grid) == 6
+    assert grid[0].attack == "a1" and grid[0].defense == "d1"
+    seeded = with_seeds(grid, 4)
+    assert len(seeded) == 24
+    assert sorted({s.seed for s in seeded}) == [0, 1, 2, 3]
+    with pytest.raises(ValueError):
+        expand_grid(attack=["a"], defense=["d"], not_a_field=[1])
+
+
+def test_batch_key_grouping():
+    scns = (
+        # scale variants + seeds of one family/defense -> one group
+        [Scenario(attack=a, defense="safeguard_double", seed=k)
+         for a in ("safeguard_x0.6", "safeguard_x0.7") for k in (0, 1)]
+        # floor variants batch for safeguard defenses
+        + [Scenario(attack="safeguard_x0.6", defense="safeguard_double",
+                    threshold_floor=0.5)]
+        # different defense -> own group
+        + [Scenario(attack="safeguard_x0.6", defense="mean")]
+        # krum consumes n_byz statically -> one group per n_byz
+        + [Scenario(attack="sign_flip", defense="krum", n_byz=b)
+           for b in (3, 4)]
+        # n_byz is a vmap knob for coord_median -> one group
+        + [Scenario(attack="sign_flip", defense="coord_median", n_byz=b)
+           for b in (3, 4)]
+    )
+    groups = engine.group_scenarios(scns)
+    assert [len(g) for g in groups] == [5, 1, 1, 1, 2]
+
+
+# ---------------------------------------------------------------- engine
+
+
+STEPS = 30
+
+
+def test_engine_matches_trainer_path():
+    """Acceptance: vmapped engine trajectories == the per-trial Trainer
+    path, numerically identical (same rng streams, same op order)."""
+    task = tasks.make_teacher_task()
+    for attack, defense in [("sign_flip", "safeguard_double"),
+                            ("variance", "coord_median"),
+                            ("label_flip", "krum"),
+                            ("sign_flip", "zeno")]:
+        scn = common.scenario_for(attack, defense, steps=STEPS, task=task)
+        eng = engine.run_scenarios([scn])[scenario_id(scn)]
+        loop = common.run_experiment_loop(task, attack, defense,
+                                          steps=STEPS)
+        assert eng["acc"] == pytest.approx(loop["acc"], abs=1e-12), \
+            (attack, defense)
+        if "caught_byz" in loop:
+            assert eng["caught_byz"] == loop["caught_byz"]
+            assert eng["evicted_honest"] == loop["evicted_honest"]
+
+
+def test_stateful_attacks_vmap_bitexact():
+    """Satellite: delayed/burst attack-state pytrees batch correctly over
+    the seed axis — vmapped lanes match the unbatched trajectory
+    bit-for-bit."""
+    for attack in ("delayed", "burst"):
+        scns = [Scenario(attack=attack, defense="safeguard_double",
+                         steps=STEPS, seed=k, delay=8, burst_start=6,
+                         burst_length=8) for k in range(3)]
+        assert len(engine.group_scenarios(scns)) == 1
+        batched = engine.run_scenarios(scns, batched=True)
+        unbatched = engine.run_scenarios(scns, batched=False)
+        for s in scns:
+            b, u = batched[scenario_id(s)], unbatched[scenario_id(s)]
+            for key in b["traces"]:
+                assert np.array_equal(b["traces"][key], u["traces"][key]), \
+                    (attack, s.seed, key)
+            assert np.array_equal(b["final_good"], u["final_good"])
+            assert b["acc"] == u["acc"]
+
+
+def test_threshold_floor_is_a_vmap_axis():
+    """All safeguard-threshold variants run as lanes of one program, and
+    the traced floor actually changes the filter decision."""
+    scns = [Scenario(attack="sign_flip", defense="safeguard_single",
+                     steps=STEPS, threshold_floor=f)
+            for f in (0.1, 10 ** 6)]
+    assert len(engine.group_scenarios(scns)) == 1
+    res = engine.run_scenarios(scns)
+    tight, huge = (res[scenario_id(s)] for s in scns)
+    assert tight["caught_byz"] == 4          # sign-flippers evicted
+    assert huge["caught_byz"] == 0           # threshold too lax to evict
+
+
+def test_n_byz_is_a_vmap_axis_for_maskless_defenses():
+    scns = [Scenario(attack="sign_flip", defense="coord_median",
+                     steps=STEPS, n_byz=b) for b in (0, 4)]
+    assert len(engine.group_scenarios(scns)) == 1
+    res = engine.run_scenarios(scns)
+    clean, attacked = (res[scenario_id(s)]["acc"] for s in scns)
+    assert clean > attacked                  # alpha=0 trains strictly better
+
+
+def test_trace_shapes():
+    scn = Scenario(attack="none", defense="safeguard_double", steps=STEPS)
+    rec = engine.run_scenarios([scn])[scenario_id(scn)]
+    for key in ("loss", "n_good", "caught_byz"):
+        assert rec["traces"][key].shape == (STEPS,)
+    assert rec["traces"]["n_good"][-1] == 10.0
+
+
+# ----------------------------------------------------------------- store
+
+
+def test_store_resume_and_delta(tmp_path):
+    argv = ["--campaign", "smoke", "--steps", "8", "--seeds", "1",
+            "--root", str(tmp_path)]
+    first = campaign_run.main(argv)
+    assert (first["cells"], first["ran"]) == (4, 4)
+    second = campaign_run.main(argv)
+    assert second["ran"] == 0                # full resume: 0 new cells
+    third = campaign_run.main(["--campaign", "smoke", "--steps", "8",
+                               "--seeds", "2", "--root", str(tmp_path)])
+    assert (third["cells"], third["ran"]) == (8, 4)   # only the delta
+
+
+def test_store_tolerates_torn_line(tmp_path):
+    store = CampaignStore("t", root=str(tmp_path))
+    s = Scenario(attack="none", defense="mean")
+    store.append(s, {"acc": 0.5, "traces": {"loss": np.zeros(3)}})
+    with open(store.path, "a") as f:
+        f.write('{"id": "torn')                       # killed mid-write
+    records = store.load()
+    assert set(records) == {scenario_id(s)}
+    assert "traces" not in records[scenario_id(s)]["result"]
+    assert store.pending([s, dataclasses.replace(s, seed=1)]) == \
+        [dataclasses.replace(s, seed=1)]
+
+
+def test_store_traces_opt_in(tmp_path):
+    store = CampaignStore("t2", root=str(tmp_path))
+    s = Scenario(attack="none", defense="mean")
+    store.append(s, {"acc": 0.5, "traces": {"loss": np.ones(2)}},
+                 store_traces=True)
+    rec = store.load()[scenario_id(s)]
+    assert rec["result"]["traces"]["loss"] == [1.0, 1.0]
+    json.dumps(rec)                                   # fully serializable
+
+
+# ------------------------------------------------------- table1 stats
+
+
+def test_build_rows_multiseed_stats():
+    scns = [Scenario(attack="a", defense="d", seed=k) for k in range(3)]
+    fake = {scenario_id(s): {"acc": acc, "caught_byz": 4,
+                             "evicted_honest": 0}
+            for s, acc in zip(scns, (0.4, 0.5, 0.6))}
+    rows = table1_attack_grid.build_rows(scns, fake)
+    assert len(rows) == 1
+    row = rows[0]
+    assert row["acc_mean"] == pytest.approx(0.5)
+    assert row["acc_std"] == pytest.approx(np.std([0.4, 0.5, 0.6]))
+    assert row["acc"] == row["acc_mean"]
+    assert row["seeds"] == 3 and row["caught_byz"] == 4
