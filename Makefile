@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench-quick bench-overhead campaign-smoke lint \
-	dryrun-smoke
+.PHONY: test test-fast bench-quick bench-overhead campaign-smoke \
+	adaptive-smoke lint dryrun-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -24,6 +24,10 @@ campaign-smoke:
 	$(PY) -m repro.campaign.run --campaign table1 --quick --seeds 2
 	$(PY) -m repro.campaign.run --campaign table1 --quick --seeds 2 \
 	    | grep -q "new_cells=0"
+
+# the CI adaptive step: feedback-coupled adversaries end-to-end (DESIGN.md §11)
+adaptive-smoke:
+	$(PY) -m repro.campaign.run --campaign adaptive --quick --seeds 2
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

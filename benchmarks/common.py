@@ -95,7 +95,10 @@ def run_experiment_loop(task, attack_name: str, defense_name: str, *,
                         seed: int = 0, reset_period: int = 0,
                         collect=None) -> Dict:
     """Legacy per-trial ``Trainer`` path: one jit, python-loop steps."""
-    attack = atk_lib.make_registry(delay=32)[attack_name]
+    # steps is forwarded so the burst window derives from the trial length
+    # (and an unfireable explicit window fails loudly) — same derivation
+    # as the engine path, keeping the two bit-identical
+    attack = atk_lib.make_registry(delay=32, steps=steps)[attack_name]
     sg_cfg, aggregator = make_defense(defense_name,
                                       reset_period=reset_period)
     opt = make_optimizer(TrainConfig(lr=lr))

@@ -24,7 +24,7 @@ import statistics
 from typing import Dict, List, Sequence, Tuple
 
 from repro.campaign import engine
-from repro.campaign.scenario import Scenario, scenario_id
+from repro.campaign.scenario import ADAPTIVE_ATTACKS, Scenario, scenario_id
 from repro.data import tasks
 from benchmarks import common
 
@@ -53,16 +53,20 @@ def build_rows(scenarios: Sequence[Scenario],
 
 
 def run(steps: int = 150, out_dir: str = "experiments/bench",
-        seeds: int = 1):
+        seeds: int = 1, adaptive: bool = True):
+    """``adaptive=True`` appends the feedback-coupled adversary rows
+    (DESIGN.md §11) below the paper's static grid."""
     task = tasks.make_teacher_task()
     ideal = common.ideal_accuracy(task, steps=steps)
+    attacks = list(common.ATTACKS) + (list(ADAPTIVE_ATTACKS) if adaptive
+                                      else [])
     scenarios = [common.scenario_for(a, d, steps=steps, seed=k, task=task)
-                 for a in common.ATTACKS for d in common.DEFENSES
+                 for a in attacks for d in common.DEFENSES
                  for k in range(seeds)]
     results = engine.run_scenarios(scenarios, verbose=True)
     rows = build_rows(scenarios, results)
     cells = {(r["attack"], r["defense"]): r for r in rows}
-    for attack in common.ATTACKS:
+    for attack in attacks:
         for defense in common.DEFENSES:
             r = cells[(attack, defense)]
             print(f"table1,{attack},{defense},{r['acc']:.4f},"
@@ -77,7 +81,7 @@ def run(steps: int = 150, out_dir: str = "experiments/bench",
     header = "| attack | " + " | ".join(common.DEFENSES) + " |"
     print(header)
     print("|" + "---|" * (len(common.DEFENSES) + 1))
-    for attack in common.ATTACKS:
+    for attack in attacks:
         parts = []
         for defense in common.DEFENSES:
             r = cells[(attack, defense)]

@@ -11,8 +11,10 @@ and ~150 python-dispatched steps per grid cell.  The engine instead:
 2. ``vmap``s the trial over every scenario axis that is a *traced knob*
    rather than program structure — the seed axis always, plus
    ``attack_scale`` (all ``scaled_flip``/``safeguard_x*`` variants),
-   ``threshold_floor`` (safeguard defenses) and ``n_byz`` (defenses whose
-   aggregator does not consume b statically);
+   ``threshold_floor`` (safeguard defenses), ``n_byz`` (defenses whose
+   aggregator does not consume b statically) and the ``adapt_*``
+   controller knobs of the feedback-coupled adaptive attacks
+   (DESIGN.md §11);
 3. groups scenarios by :func:`batch_key` — everything that changes the
    traced program (attack family, defense, m, steps, windows, task shape)
    — so a 6x7x5-seed Table-1 grid compiles ~35 programs instead of
@@ -75,20 +77,41 @@ def batch_key(s: Scenario) -> Tuple:
             s.n_byz if s.defense in STATIC_NBYZ_DEFENSES else None)
 
 
-def _build_attack(family: str, rep: Scenario, scale) -> atk_lib.Attack:
-    """Instantiate the attack; ``scale`` may be a traced scalar (the
-    scaled_flip closure only does arithmetic with it)."""
+def _build_attack(family: str, rep: Scenario, knobs) -> atk_lib.Attack:
+    """Instantiate the attack from the vmappable ``knobs`` dict — the
+    scale and adapt_* entries may be traced scalars (the attack closures
+    only do arithmetic with them)."""
     if family == "scaled_flip":
-        return atk_lib.Attack("scaled_flip", atk_lib.make_scaled_flip(scale))
+        return atk_lib.Attack("scaled_flip",
+                              atk_lib.make_scaled_flip(knobs["attack_scale"]))
+    if family == "adaptive_flip":
+        return atk_lib.make_adaptive_flip(
+            init_scale=knobs["adapt_init"], up=knobs["adapt_rate"],
+            down=knobs["adapt_down"], target=knobs["adapt_target"])
+    if family == "adaptive_variance":
+        return atk_lib.make_adaptive_variance(
+            z_init=knobs["adapt_init"], up=knobs["adapt_rate"],
+            down=knobs["adapt_down"])
+    if family == "oscillating":
+        return atk_lib.make_oscillating(
+            init_scale=knobs["adapt_init"], up=knobs["adapt_rate"],
+            high=knobs["adapt_target"], low=0.5 * knobs["adapt_target"],
+            down=knobs["adapt_down"])
+    if family == "median_capture":
+        return atk_lib.make_median_capture(
+            eps_init=knobs["adapt_init"], up=knobs["adapt_rate"],
+            down=knobs["adapt_down"])
     if family == "delayed":
         fn = atk_lib.make_delayed(rep.delay)
         return atk_lib.Attack("delayed", fn, init=fn.init)
     if family == "burst":
-        return atk_lib.Attack("burst", atk_lib.make_burst(
-            rep.burst_start, rep.burst_length, 5.0))
-    registry = atk_lib.make_registry(delay=rep.delay,
-                                     burst_start=rep.burst_start,
-                                     burst_length=rep.burst_length)
+        # window derivation + never-fires validation live in make_registry
+        # (single source, shared with the legacy Trainer path)
+        return atk_lib.make_registry(
+            delay=rep.delay,
+            burst_start=None if rep.burst_start < 0 else rep.burst_start,
+            burst_length=rep.burst_length, steps=rep.steps)["burst"]
+    registry = atk_lib.make_registry(delay=rep.delay, steps=rep.steps)
     if family not in registry:
         raise ValueError(f"unknown attack {family!r}")
     return registry[family]
@@ -128,7 +151,7 @@ def make_trial_fn(rep: Scenario):
         seed = knobs["seed"]
         n_byz = knobs["n_byz"] if dynamic_nbyz else rep.n_byz
         byz_mask = jnp.arange(rep.m) < n_byz
-        attack = _build_attack(family, rep, knobs["attack_scale"])
+        attack = _build_attack(family, rep, knobs)
         sg_cfg, aggregator = _build_defense(rep, knobs["threshold_floor"])
 
         params = tasks.student_init(task, seed=seed + 1)
@@ -182,6 +205,17 @@ def stack_knobs(group: Sequence[Scenario]) -> Dict[str, jax.Array]:
         "threshold_floor": jnp.asarray([s.threshold_floor for s in group],
                                        jnp.float32),
         "n_byz": jnp.asarray([s.n_byz for s in group], jnp.int32),
+        # adaptive-attack controller knobs (DESIGN.md §11) — pure
+        # arithmetic inside the observe/act closures, so every adaptive
+        # variant of one family is a lane of the same program
+        "adapt_init": jnp.asarray([s.adapt_init for s in group],
+                                  jnp.float32),
+        "adapt_rate": jnp.asarray([s.adapt_rate for s in group],
+                                  jnp.float32),
+        "adapt_down": jnp.asarray([s.adapt_down for s in group],
+                                  jnp.float32),
+        "adapt_target": jnp.asarray([s.adapt_target for s in group],
+                                    jnp.float32),
     }
 
 

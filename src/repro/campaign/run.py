@@ -12,6 +12,9 @@ knob axes into vmap lanes, see ``engine.batch_key``):
   threshold_sweep  safeguard threshold_floor sweep under the variance
                    attack (single + double guard) — one program per
                    defense, every floor a vmap lane
+  adaptive         feedback-coupled adversaries (DESIGN.md §11) x
+                   {safeguard_double, mean} — the adapt_* controller
+                   knobs are vmap lanes like seeds
   smoke            2x2 mini-grid for CI / tests
 
 A second invocation with the same arguments runs 0 new cells (the store
@@ -26,9 +29,9 @@ import time
 from typing import Callable, Dict, List
 
 from repro.campaign import engine
-from repro.campaign.scenario import (Scenario, TABLE1_ATTACKS,
-                                     TABLE1_DEFENSES, expand_grid,
-                                     scenario_id, with_seeds)
+from repro.campaign.scenario import (ADAPTIVE_ATTACKS, Scenario,
+                                     TABLE1_ATTACKS, TABLE1_DEFENSES,
+                                     expand_grid, scenario_id, with_seeds)
 from repro.campaign.store import DEFAULT_ROOT, CampaignStore
 
 
@@ -59,6 +62,15 @@ def _threshold_sweep(seeds: int, steps: int) -> List[Scenario]:
     return with_seeds(grid, seeds)
 
 
+def _adaptive(seeds: int, steps: int) -> List[Scenario]:
+    """Feedback-coupled adversaries (DESIGN.md §11) against the safeguard
+    and the no-defense baseline: the threshold tracker must degrade
+    ``mean`` while SafeguardSGD stays within noise of its static rows."""
+    grid = expand_grid(attack=list(ADAPTIVE_ATTACKS),
+                       defense=["safeguard_double", "mean"], steps=[steps])
+    return with_seeds(grid, seeds)
+
+
 def _smoke(seeds: int, steps: int) -> List[Scenario]:
     grid = expand_grid(attack=["sign_flip", "variance"],
                        defense=["safeguard_double", "coord_median"],
@@ -71,6 +83,7 @@ CAMPAIGNS: Dict[str, Callable[[int, int], List[Scenario]]] = {
     "fig2": _fig2,
     "alpha_sweep": _alpha_sweep,
     "threshold_sweep": _threshold_sweep,
+    "adaptive": _adaptive,
     "smoke": _smoke,
 }
 

@@ -4,9 +4,11 @@ A :class:`Scenario` is one cell of the paper's evaluation grid — attack x
 defense x alpha x seed plus every knob that changes the trajectory
 (optimizer, windows, thresholds, task shape).  It is frozen, fully
 JSON-serializable, and content-addressed: :func:`scenario_id` hashes the
-field dict, so the resumable store (``repro.campaign.store``) can skip
-cells that already ran and a grid extended with new attacks/defenses only
-runs the delta.
+dict of *non-default* fields, so the resumable store
+(``repro.campaign.store``) can skip cells that already ran, a grid
+extended with new attacks/defenses only runs the delta, and adding a new
+defaulted knob field to ``Scenario`` later does not re-key existing
+cells.
 
 Grid helpers:
 
@@ -29,12 +31,18 @@ import itertools
 import json
 from typing import Dict, Iterable, List, Sequence
 
+from repro.core.attacks import ADAPTIVE_DEFAULTS
+
 # The paper's Table 1 grid (Section 5 / Appendix C) — canonical lists,
 # re-exported by benchmarks.common for back-compat.
 TABLE1_ATTACKS = ("variance", "sign_flip", "label_flip", "delayed",
                   "safeguard_x0.6", "safeguard_x0.7")
 TABLE1_DEFENSES = ("safeguard_single", "safeguard_double", "coord_median",
                    "geo_median", "krum", "zeno", "mean")
+# Feedback-coupled adversaries (DESIGN.md §11) — names in the
+# core.attacks registry; their adapt_* knobs are vmap axes.
+ADAPTIVE_ATTACKS = ("adaptive_flip", "adaptive_variance", "oscillating",
+                    "median_capture")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,8 +69,16 @@ class Scenario:
     # attack knobs
     attack_scale: float = 0.0     # scaled_flip family; 0 -> from the name
     delay: int = 32               # delayed attack circular-buffer length
-    burst_start: int = 200
+    burst_start: int = -1         # -1: derive from trial length (steps // 3)
     burst_length: int = 50
+    # adaptive-attack knobs (vmap axes, engine.stack_knobs): initial
+    # scale/z/eps, ramp-up multiplier, caught back-off multiplier, and the
+    # threshold fraction the tracker aims at — defaults are the single
+    # source shared with the make_adaptive_* factories (core.attacks)
+    adapt_init: float = ADAPTIVE_DEFAULTS["adapt_init"]
+    adapt_rate: float = ADAPTIVE_DEFAULTS["adapt_rate"]
+    adapt_down: float = ADAPTIVE_DEFAULTS["adapt_down"]
+    adapt_target: float = ADAPTIVE_DEFAULTS["adapt_target"]
     # teacher-student task shape
     d_in: int = 32
     d_hidden: int = 64
@@ -73,9 +89,26 @@ class Scenario:
         return dataclasses.asdict(self)
 
 
+# field -> default value; fields without a default (attack, defense) are
+# always part of the hash blob
+_FIELD_DEFAULTS = {
+    name: f.default for name, f in Scenario.__dataclass_fields__.items()
+    if f.default is not dataclasses.MISSING
+}
+_MISSING = object()
+
+
 def scenario_id(s: Scenario) -> str:
-    """Stable content hash of the scenario — the store key."""
-    blob = json.dumps(s.asdict(), sort_keys=True)
+    """Stable content hash of the scenario — the store key.
+
+    Fields sitting at their default value are EXCLUDED from the hash
+    blob, so growing ``Scenario`` by a new defaulted knob later does not
+    re-key (and thereby orphan) every previously stored cell whose
+    execution is unchanged."""
+    blob = json.dumps(
+        {k: v for k, v in s.asdict().items()
+         if _FIELD_DEFAULTS.get(k, _MISSING) != v},
+        sort_keys=True)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 

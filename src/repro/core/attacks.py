@@ -1,16 +1,26 @@
-"""Byzantine attack library (paper Section 5 + Appendix C).
+"""Byzantine attack library (paper Section 5 + Appendix C) and the
+feedback-coupled adversary protocol (DESIGN.md §11).
 
-An attack is a pure function transforming the stacked honest per-worker
-gradients into what the master actually receives:
+An attack is a stateful ``observe / act`` object (:class:`Attack`):
 
-    attack(grads, byz_mask, state, step, rng) -> (grads', state')
+    act(grads, byz_mask, state, step, rng) -> (grads', state')
+    observe(state, feedback, byz_mask)     -> state'          [optional]
 
-``byz_mask`` is a static (m,) bool array marking Byzantine workers; honest
-rows are passed through untouched.  Attacks may collude: they see the full
-honest stack (the strongest, paper-consistent threat model — Remark 2.2
-allows byzantine vectors to depend on everything up to the current step).
+``act`` rewrites the rows of the stacked honest per-worker gradients that
+``byz_mask`` (a static (m,) bool array) marks as Byzantine; honest rows
+pass through untouched.  ``observe`` — present only on *adaptive* attacks
+— folds the defense's **public outputs of the previous step** into the
+attack state: the good mask, the live eviction thresholds, each worker's
+distance to the concentration median, and the filter scores (see
+:func:`feedback_from_info`).  This is the strongest threat model the
+paper permits: Remark 2.2 allows Byzantine vectors to depend on
+*everything* up to the current step, including the defense's decisions.
+The trainer threads the state through ``TrainState.attack_state``, so the
+whole loop stays ``lax.scan``-able and vmap-able (campaign engine).
 
-Attacks implemented:
+Open-loop attacks (pure functions of the current honest stack; attacks
+may collude — they see the full honest gradients):
+
   * ``none``              — honest execution;
   * ``sign_flip``         — send the negated gradient;
   * ``scaled_flip``       — send ``-scale * g`` (the paper's *safeguard
@@ -27,6 +37,25 @@ Attacks implemented:
     steps in which the gradient is scaled by ``-burst_scale``;
   * ``random_noise``      — i.i.d. Gaussian junk (sanity baseline).
 
+Feedback-coupled (adaptive) attacks:
+
+  * ``adaptive_flip``     — threshold-tracking scaled flip: a multiplicative
+    controller ramps the flip scale while the colluders' accumulated
+    distance sits below ``target`` of the live eviction threshold, eases
+    off as it approaches, and backs off hard when a colluder is caught;
+  * ``adaptive_variance`` — eviction-aware [Baruch et al.]: shrinks ``z``
+    whenever a colluder is newly evicted, creeps back up otherwise;
+  * ``oscillating``       — hysteresis attacker: flips gradients until the
+    tracked distance crosses a high-water fraction of the threshold, then
+    behaves honestly (freezing the deviation until the window reset drains
+    it) and resumes below the low-water mark;
+  * ``median_capture``    — greedy collusion on the concentration median:
+    all colluders report ``(1 - eps) * mean(honest)`` (intra-cluster
+    distance 0, hugging the honest cluster) and ramp ``eps`` greedily
+    while one of them *holds* the median — trying to drag the reference
+    point and push honest workers over the threshold — retreating toward
+    the honest mean whenever the median is lost or a colluder is caught.
+
 Label-flipping is a *data* attack, implemented in ``repro.data`` (the
 Byzantine worker computes a true gradient of a corrupted loss).
 """
@@ -41,6 +70,24 @@ import jax.numpy as jnp
 
 from repro.core import tree_utils as tu
 
+f32 = jnp.float32
+
+# Threshold reported to adaptive attacks when no filtering defense is
+# active (null feedback): effectively infinite headroom, so trackers ramp
+# to their cap.  Finite (not inf) so ratio arithmetic stays NaN-free.
+OPEN_LOOP_THRESHOLD = 1e30
+
+# Controller defaults shared by the adaptive-attack factories below AND
+# the campaign layer's ``Scenario.adapt_*`` fields — single source, so
+# the legacy Trainer path (registry defaults) and the campaign engine
+# (Scenario knobs) run the same attack under the same name.
+ADAPTIVE_DEFAULTS = {
+    "adapt_init": 0.2,     # initial scale / z / eps
+    "adapt_rate": 1.08,    # multiplicative ramp while there is headroom
+    "adapt_down": 0.5,     # back-off on a fresh eviction
+    "adapt_target": 0.8,   # threshold fraction the tracker aims at
+}
+
 
 def _mix(honest, adversarial, byz_mask):
     """Per-worker select: byzantine rows from ``adversarial``."""
@@ -52,16 +99,15 @@ def _mix(honest, adversarial, byz_mask):
 
 def _honest_stats(grads, byz_mask):
     """Mean and std over honest workers only, per coordinate."""
-    w = (~byz_mask).astype(jnp.float32)
+    w = (~byz_mask).astype(f32)
     n = jnp.maximum(w.sum(), 1.0)
 
     def stats(g):
-        gw = g.astype(jnp.float32)
+        gw = g.astype(f32)
         wshape = (-1,) + (1,) * (g.ndim - 1)
         mu = (gw * w.reshape(wshape)).sum(axis=0) / n
         var = (((gw - mu[None]) ** 2) * w.reshape(wshape)).sum(axis=0) / n
         return mu, jnp.sqrt(var + 1e-12)
-    mus, sigmas = {}, {}
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     out = [stats(l) for l in leaves]
     mu_tree = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
@@ -69,6 +115,60 @@ def _honest_stats(grads, byz_mask):
     return mu_tree, sd_tree
 
 
+# --------------------------------------------------------------------------
+# Defense feedback (the public outputs adaptive attacks may observe)
+# --------------------------------------------------------------------------
+
+def null_feedback(m: int) -> Dict[str, jax.Array]:
+    """Feedback when the defense publishes nothing (baseline aggregators /
+    no defense): everyone good, zero distances, unbounded thresholds.
+    Fixed shapes/dtypes so the attack state stays scan/vmap-stable."""
+    return {
+        "good": jnp.ones((m,), bool),
+        "dist_to_med": jnp.zeros((m,), f32),
+        "threshold": jnp.asarray(OPEN_LOOP_THRESHOLD, f32),
+        "dist_to_med_A": jnp.zeros((m,), f32),
+        "threshold_A": jnp.asarray(OPEN_LOOP_THRESHOLD, f32),
+        "scores": jnp.zeros((m,), f32),
+        "med": jnp.zeros((), jnp.int32),
+        "n_good": jnp.asarray(m, f32),
+    }
+
+
+def feedback_from_info(info: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Project ``safeguard_step``'s info dict onto the public feedback the
+    threat model of Remark 2.2 grants the adversary (both guards'
+    thresholds and median distances, the good mask, the filter scores)."""
+    return {
+        "good": info["good"],
+        "dist_to_med": jnp.asarray(info["dist_to_med_B"], f32),
+        "threshold": jnp.asarray(info["threshold_B"], f32),
+        "dist_to_med_A": jnp.asarray(info["dist_to_med_A"], f32),
+        "threshold_A": jnp.asarray(info["threshold_A"], f32),
+        "scores": jnp.asarray(info["scores_B"], f32),
+        "med": jnp.asarray(info["med_B"], jnp.int32),
+        "n_good": jnp.asarray(info["n_good"], f32),
+    }
+
+
+def _byz_dist_frac(fb, byz_mask):
+    """Worst colluder's distance as a fraction of the live threshold,
+    across BOTH guards (the binding one governs) — evicted colluders no
+    longer count."""
+    live = byz_mask & fb["good"]
+    frac_b = (jnp.max(jnp.where(live, fb["dist_to_med"], 0.0))
+              / jnp.maximum(fb["threshold"], 1e-12))
+    frac_a = (jnp.max(jnp.where(live, fb["dist_to_med_A"], 0.0))
+              / jnp.maximum(fb["threshold_A"], 1e-12))
+    return jnp.maximum(frac_b, frac_a)
+
+
+def _caught_count(fb, byz_mask):
+    return (byz_mask & ~fb["good"]).sum().astype(f32)
+
+
+# --------------------------------------------------------------------------
+# Open-loop attacks
 # --------------------------------------------------------------------------
 
 def attack_none(grads, byz_mask, state, step, rng):
@@ -118,7 +218,7 @@ def make_delayed(delay: int):
     def init(grads_like):
         return {
             "buffer": jax.tree.map(
-                lambda l: jnp.zeros((delay,) + l.shape, jnp.float32),
+                lambda l: jnp.zeros((delay,) + l.shape, f32),
                 grads_like),
         }
 
@@ -129,11 +229,11 @@ def make_delayed(delay: int):
         # before the buffer fills, replay the earliest honest mean we have
         ready = step >= delay
         adv_single = jax.tree.map(
-            lambda o, m_: jnp.where(ready, o, m_.astype(jnp.float32)), old, mu)
+            lambda o, m_: jnp.where(ready, o, m_.astype(f32)), old, mu)
         adv = jax.tree.map(
             lambda a, g: jnp.broadcast_to(a[None], g.shape), adv_single, grads)
         new_buf = jax.tree.map(
-            lambda b, m_: b.at[slot].set(m_.astype(jnp.float32)),
+            lambda b, m_: b.at[slot].set(m_.astype(f32)),
             state["buffer"], mu)
         return _mix(grads, adv, byz_mask), {"buffer": new_buf}
 
@@ -159,7 +259,7 @@ def make_random_noise(sigma: float = 1.0):
     def attack(grads, byz_mask, state, step, rng):
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         keys = jax.random.split(rng, len(leaves))
-        noise = [sigma * jax.random.normal(k, l.shape, jnp.float32)
+        noise = [sigma * jax.random.normal(k, l.shape, f32)
                  for k, l in zip(keys, leaves)]
         adv = jax.tree_util.tree_unflatten(treedef, noise)
         return _mix(grads, adv, byz_mask), state
@@ -167,17 +267,210 @@ def make_random_noise(sigma: float = 1.0):
 
 
 # --------------------------------------------------------------------------
+# Attack protocol object
+# --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class Attack:
+    """observe/act adversary.  ``act`` rewrites the Byzantine rows;
+    ``observe`` (adaptive attacks only) folds the previous step's public
+    defense feedback into the state the next ``act`` will read.  ``fn``
+    is a legacy alias for ``act``."""
     name: str
-    fn: Callable
+    act: Callable
     init: Optional[Callable] = None   # state initializer (grads_like) -> state
+    observe: Optional[Callable] = None  # (state, feedback, byz_mask) -> state
     data_attack: bool = False         # label flipping lives in the pipeline
 
+    @property
+    def fn(self) -> Callable:
+        return self.act
 
-def make_registry(delay: int = 64, burst_start: int = 200,
-                  burst_length: int = 50) -> Dict[str, Attack]:
+    @property
+    def adaptive(self) -> bool:
+        return self.observe is not None
+
+
+# --------------------------------------------------------------------------
+# Feedback-coupled adaptive attacks.  All state leaves are fixed-shape
+# f32 scalars, so the state pytree scans and vmaps unchanged.  Every
+# knob may be a traced scalar (campaign vmap axes) — only arithmetic.
+# --------------------------------------------------------------------------
+
+def make_adaptive_flip(init_scale=ADAPTIVE_DEFAULTS["adapt_init"],
+                       up=ADAPTIVE_DEFAULTS["adapt_rate"],
+                       down=ADAPTIVE_DEFAULTS["adapt_down"],
+                       target=ADAPTIVE_DEFAULTS["adapt_target"],
+                       aggr_min: float = 0.02, aggr_max: float = 4.0
+                       ) -> Attack:
+    """Threshold-tracking scaled flip: a multiplicative controller aiming
+    the colluders' accumulated distance at ``target`` of the live eviction
+    threshold.  The controlled quantity is the *aggression* ``u = 1 +
+    scale``: a colluder sending ``-scale * g`` deviates from the honest
+    accumulators in proportion to ``1 + scale``, so controlling ``u``
+    multiplicatively can retreat smoothly through ``scale = 0`` (sending
+    zeros) all the way to honest mimicry (``u -> 0``) when the live
+    threshold leaves no room — exactly the bounded-harm regime the paper's
+    concentration argument forces on any non-evicted worker.  Ratio
+    ``target / frac`` (clipped to [down, up]) ramps while there is
+    headroom and eases off approaching the threshold; a fresh eviction
+    cuts ``u`` by ``down``."""
+    def init(grads_like):
+        return {"aggr": jnp.asarray(1.0 + init_scale, f32),
+                "n_caught": jnp.zeros((), f32)}
+
+    def act(grads, byz_mask, state, step, rng):
+        s = state["aggr"] - 1.0
+        adv = jax.tree.map(lambda g: -s * g.astype(f32), grads)
+        return _mix(grads, adv, byz_mask), state
+
+    def observe(state, fb, byz_mask):
+        n_caught = _caught_count(fb, byz_mask)
+        newly = n_caught > state["n_caught"]
+        frac = _byz_dist_frac(fb, byz_mask)
+        ratio = jnp.clip(target / jnp.maximum(frac, 1e-6), down, up)
+        aggr = jnp.where(newly, state["aggr"] * down,
+                         state["aggr"] * ratio)
+        aggr = jnp.clip(aggr, aggr_min, aggr_max)
+        return {"aggr": aggr, "n_caught": n_caught}
+
+    return Attack("adaptive_flip", act, init=init, observe=observe)
+
+
+def make_adaptive_variance(z_init=ADAPTIVE_DEFAULTS["adapt_init"],
+                           up=ADAPTIVE_DEFAULTS["adapt_rate"],
+                           down=ADAPTIVE_DEFAULTS["adapt_down"],
+                           z_min: float = 0.01, z_max: float = 1.5
+                           ) -> Attack:
+    """Eviction-aware [Baruch et al.]: collude on ``mu - z * sigma`` with
+    ``z`` shrinking by ``down`` whenever a colluder is newly caught and
+    creeping up by ``up`` toward ``z_max`` otherwise."""
+    def init(grads_like):
+        return {"z": jnp.asarray(z_init, f32),
+                "n_caught": jnp.zeros((), f32)}
+
+    def act(grads, byz_mask, state, step, rng):
+        mu, sd = _honest_stats(grads, byz_mask)
+        z = state["z"]
+        adv = jax.tree.map(lambda m_, s_: (m_ - z * s_)[None], mu, sd)
+        adv = jax.tree.map(
+            lambda a, g: jnp.broadcast_to(a, g.shape), adv, grads)
+        return _mix(grads, adv, byz_mask), state
+
+    def observe(state, fb, byz_mask):
+        n_caught = _caught_count(fb, byz_mask)
+        newly = n_caught > state["n_caught"]
+        z = jnp.where(newly, state["z"] * down, state["z"] * up)
+        z = jnp.clip(z, z_min, z_max)
+        return {"z": z, "n_caught": n_caught}
+
+    return Attack("adaptive_variance", act, init=init, observe=observe)
+
+
+def make_oscillating(init_scale=ADAPTIVE_DEFAULTS["adapt_init"],
+                     up=ADAPTIVE_DEFAULTS["adapt_rate"],
+                     high=ADAPTIVE_DEFAULTS["adapt_target"],
+                     low=0.5 * ADAPTIVE_DEFAULTS["adapt_target"],
+                     down=ADAPTIVE_DEFAULTS["adapt_down"],
+                     scale_min: float = 0.02, scale_max: float = 4.0
+                     ) -> Attack:
+    """Hysteresis attacker: flip by ``-scale`` while the tracked distance
+    sits below ``low`` of the threshold (ramping the scale by ``up`` while
+    that headroom lasts), freeze (behave honestly, so the accumulated
+    deviation stops growing and the next window reset drains it) once it
+    crosses ``high``, and resume below ``low``.  A fresh eviction cuts
+    the scale by ``down``."""
+    def init(grads_like):
+        return {"attacking": jnp.ones((), f32),
+                "scale": jnp.asarray(init_scale, f32),
+                "n_caught": jnp.zeros((), f32)}
+
+    def act(grads, byz_mask, state, step, rng):
+        s = state["scale"]
+        active = state["attacking"] > 0.5
+        adv = jax.tree.map(lambda g: -s * g.astype(f32), grads)
+        mixed = _mix(grads, adv, byz_mask)
+        out = jax.tree.map(lambda h, x: jnp.where(active, x, h),
+                           grads, mixed)
+        return out, state
+
+    def observe(state, fb, byz_mask):
+        n_caught = _caught_count(fb, byz_mask)
+        newly = n_caught > state["n_caught"]
+        frac = _byz_dist_frac(fb, byz_mask)
+        attacking = jnp.where(frac >= high, 0.0,
+                              jnp.where(frac <= low, 1.0,
+                                        state["attacking"]))
+        ramp = (attacking > 0.5) & (frac <= low)
+        s = jnp.where(ramp, state["scale"] * up, state["scale"])
+        s = jnp.where(newly, state["scale"] * down, s)
+        return {"attacking": attacking,
+                "scale": jnp.clip(s, scale_min, scale_max),
+                "n_caught": n_caught}
+
+    return Attack("oscillating", act, init=init, observe=observe)
+
+
+def make_median_capture(eps_init=ADAPTIVE_DEFAULTS["adapt_init"],
+                        up=ADAPTIVE_DEFAULTS["adapt_rate"],
+                        down=ADAPTIVE_DEFAULTS["adapt_down"],
+                        eps_min: float = 0.01, eps_max: float = 2.0
+                        ) -> Attack:
+    """Greedy concentration-median capture: all colluders report the
+    identical vector ``(1 - eps) * mean(honest)``.  Zero intra-cluster
+    distance plus hugging the honest cluster makes a colluder the
+    empirical median; while the median is *held*, ``eps`` ramps greedily
+    (dragging the reference point, pushing honest workers toward the
+    threshold); losing the median — or a fresh eviction — retreats ``eps``
+    back toward honest mimicry to recapture it."""
+    def init(grads_like):
+        return {"eps": jnp.asarray(eps_init, f32),
+                "n_caught": jnp.zeros((), f32)}
+
+    def act(grads, byz_mask, state, step, rng):
+        mu, _ = _honest_stats(grads, byz_mask)
+        e = state["eps"]
+        adv = jax.tree.map(
+            lambda m_, g: jnp.broadcast_to(((1.0 - e) * m_)[None], g.shape),
+            mu, grads)
+        return _mix(grads, adv, byz_mask), state
+
+    def observe(state, fb, byz_mask):
+        n_caught = _caught_count(fb, byz_mask)
+        newly = n_caught > state["n_caught"]
+        captured = jnp.take(byz_mask, fb["med"])
+        eps = jnp.where(captured, state["eps"] * up, state["eps"] * down)
+        eps = jnp.where(newly, state["eps"] * down, eps)
+        eps = jnp.clip(eps, eps_min, eps_max)
+        return {"eps": eps, "n_caught": n_caught}
+
+    return Attack("median_capture", act, init=init, observe=observe)
+
+
+# --------------------------------------------------------------------------
+
+def make_registry(delay: int = 64, burst_start: Optional[int] = None,
+                  burst_length: int = 50, *,
+                  steps: Optional[int] = None) -> Dict[str, Attack]:
+    """Attack registry.
+
+    ``burst_start=None`` derives the burst window from the trial length
+    (``steps // 3``) so the burst always fires; an *explicit* start that
+    cannot fire within a known trial length fails loudly instead of
+    silently benchmarking honest execution.  ``steps=None`` (open-ended
+    runs: examples, serving) keeps the legacy start of 200.
+
+    The adaptive entries use their factory defaults, which are the same
+    :data:`ADAPTIVE_DEFAULTS` the campaign layer's ``Scenario.adapt_*``
+    fields read — the legacy Trainer path and the campaign engine run
+    the same attack under the same name by construction.
+    """
+    if burst_start is None:
+        burst_start = steps // 3 if steps is not None else 200
+    elif steps is not None and burst_start >= steps:
+        raise ValueError(
+            f"burst attack can never fire: burst_start={burst_start} >= "
+            f"steps={steps} (use burst_start=None to derive it)")
     delayed = make_delayed(delay)
     return {
         "none": Attack("none", attack_none),
@@ -191,4 +484,8 @@ def make_registry(delay: int = 64, burst_start: int = 200,
                         make_burst(burst_start, burst_length, 5.0)),
         "random_noise": Attack("random_noise", make_random_noise(1.0)),
         "label_flip": Attack("label_flip", attack_none, data_attack=True),
+        "adaptive_flip": make_adaptive_flip(),
+        "adaptive_variance": make_adaptive_variance(),
+        "oscillating": make_oscillating(),
+        "median_capture": make_median_capture(),
     }

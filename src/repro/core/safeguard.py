@@ -293,7 +293,11 @@ def _empirical_filter(sqdist: jax.Array, good: jax.Array, m: int,
     Returns (pass mask, med index, threshold, scores).
     """
     big = jnp.float32(1e30)
-    dist = jnp.sqrt(sqdist)
+    # decision-site clamp: every sqdist producer clips at 0, but a negative
+    # from f32 cancellation slipping through would turn sqrt into NaN and a
+    # NaN distance compares False against the threshold — silently evicting
+    # honest workers.  Never trust the upstream here.
+    dist = jnp.sqrt(jnp.maximum(sqdist, 0.0))
     # mask non-good rows/cols
     dist = jnp.where(good[None, :], dist, big)
     dist = jnp.where(good[:, None], dist, big)
@@ -315,7 +319,7 @@ def _theoretical_filter(sqdist: jax.Array, good: jax.Array, m: int,
     """Paper Algorithm 1 lines 9-11: med = any good i with a strict majority
     of workers within ``thresh``;  evict at ``2 * thresh``."""
     big = jnp.float32(1e30)
-    dist = jnp.sqrt(sqdist)
+    dist = jnp.sqrt(jnp.maximum(sqdist, 0.0))   # see _empirical_filter
     dist = jnp.where(good[None, :], dist, big)
     dist = jnp.where(good[:, None], dist, big)
     within = (dist <= thresh) & good[None, :] & good[:, None]
@@ -404,10 +408,17 @@ def safeguard_step(state: SafeguardState, grads, cfg: SafeguardConfig,
     t = state.step
     good = state.good
 
-    # Section 5 relaxation: periodically restore every worker.
+    # Section 5 relaxation: periodically restore every worker.  A restored
+    # worker's ``evicted_at`` diagnostic is cleared too — otherwise the
+    # post-reset eviction times (fig2b trace) would keep reporting the
+    # pre-reset eviction forever.
+    restored = jnp.zeros_like(good)
+    evicted_at = state.evicted_at
     if cfg.reset_period > 0:
         restore = (t % cfg.reset_period) == 0
+        restored = restore & ~good
         good = jnp.where(restore, jnp.ones_like(good), good)
+        evicted_at = jnp.where(restored, -1, evicted_at)
 
     n_good = jnp.maximum(good.sum(), 1).astype(jnp.float32)
     inv_ngood = 1.0 / n_good
@@ -469,7 +480,7 @@ def safeguard_step(state: SafeguardState, grads, cfg: SafeguardConfig,
     new_good = good & okA & okB
 
     newly_evicted = good & ~new_good
-    evicted_at = jnp.where(newly_evicted, t, state.evicted_at)
+    evicted_at = jnp.where(newly_evicted, t, evicted_at)
 
     # SGD direction over good_t (pre-filter, paper line 12) or good_{t+1}.
     agg_mask = good if cfg.aggregate_prefilter else new_good
@@ -494,15 +505,20 @@ def safeguard_step(state: SafeguardState, grads, cfg: SafeguardConfig,
         evicted_at=evicted_at,
         layout=state.layout,
     )
+    dist_B = jnp.sqrt(jnp.maximum(sqdist_B, 0.0))[:, medB]
+    dist_A = (jnp.sqrt(jnp.maximum(sqdist_A, 0.0))[:, medA]
+              if sqdist_A is not None else dist_B)
     info = {
         "n_good": n_good,
         "med_B": medB,
         "med_A": medA,
         "threshold_B": thB,
         "threshold_A": thA,
-        "dist_to_med_B": jnp.sqrt(sqdist_B)[:, medB],
+        "dist_to_med_B": dist_B,
+        "dist_to_med_A": dist_A,
         "scores_B": scoresB,
         "newly_evicted": newly_evicted,
+        "restored": restored,
         "good": new_good,
     }
     return new_state, agg, info

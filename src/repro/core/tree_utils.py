@@ -109,6 +109,23 @@ def tree_sq_norm(tree) -> jax.Array:
     return tree_dot(tree, tree)
 
 
+def tree_row_sq_norms(tree) -> jax.Array:
+    """``(m,)`` squared L2 norm of every worker row of a stacked pytree —
+    the Gram diagonal at O(m d) instead of the O(m^2 d) full Gram.
+    Elementwise square + per-leaf reduction (no flattening reshape), so
+    model-axis sharding of large leaves survives."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    m = leaves[0].shape[0]
+    tot = jnp.zeros((m,), jnp.float32)
+    for leaf in leaves:
+        lf = leaf.astype(jnp.float32)
+        sq = lf * lf
+        if lf.ndim > 1:
+            sq = sq.sum(axis=tuple(range(1, lf.ndim)))
+        tot = tot + sq
+    return tot
+
+
 def gram_to_sqdist(gram: jax.Array) -> jax.Array:
     """Pairwise squared distances from a Gram matrix, clipped at 0."""
     diag = jnp.diagonal(gram)

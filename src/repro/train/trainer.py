@@ -8,7 +8,11 @@ master/worker protocol in SPMD form:
      the worker axis is sharded over ``data`` so each data shard computes
      exactly one worker's gradient (DESIGN.md §3);
   2. the Byzantine simulation — an attack from ``core.attacks`` rewrites
-     the rows of the stacked gradient marked by ``byz_mask``;
+     the rows of the stacked gradient marked by ``byz_mask``; adaptive
+     attacks additionally ``observe`` the defense's public outputs of the
+     previous step (good mask, thresholds, median distances — DESIGN.md
+     §11), threaded through ``TrainState.attack_state`` so the feedback
+     loop survives ``scan_trial``/vmap;
   3. aggregation — SafeguardSGD (stateful, the paper's contribution) or a
      historyless baseline aggregator (coord-median, Krum, Zeno, ...).
      The safeguard's flat accumulator buffers (DESIGN.md §6) keep their
@@ -82,8 +86,9 @@ def zeno_scores(loss_fn, params, grads, held_batch, *, eta: float,
         return loss_fn(stepped, held_batch)
 
     loss_after = jax.vmap(one)(grads)
-    gram = tu.tree_gram(grads)
-    sq = jnp.diagonal(gram)
+    # per-row squared norms (O(m d)) — NOT the full (m, m) Gram, whose
+    # only consumed entries would be its diagonal
+    sq = tu.tree_row_sq_norms(grads)
     return loss_before - loss_after - rho * sq
 
 
@@ -122,9 +127,10 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
         losses, grads = jax.vmap(lambda wb: vg(state.params, wb),
                                  spmd_axis_name=spmd_axis_name)(batch)
 
-        # (2) Byzantine simulation
-        grads, attack_state = attack.fn(grads, byz_mask, state.attack_state,
-                                        state.step, k_attack)
+        # (2) Byzantine simulation — the attack state already absorbed the
+        # previous step's public defense feedback (observe, below)
+        grads, attack_state = attack.act(grads, byz_mask, state.attack_state,
+                                         state.step, k_attack)
 
         # (3) aggregation
         metrics: Dict[str, jax.Array] = {
@@ -140,6 +146,8 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
             metrics["n_good"] = info["n_good"]
             metrics["caught_byz"] = (byz_mask & ~info["good"]).sum()
             metrics["evicted_honest"] = (~byz_mask & ~info["good"]).sum()
+            metrics["restored"] = info["restored"].sum()
+            feedback = atk_lib.feedback_from_info(info)
         else:
             sg_state = state.sg_state
             if aggregator.needs_scores:
@@ -150,6 +158,13 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
                 agg = aggregator.fn(grads, scores=scores)
             else:
                 agg = aggregator.fn(grads)
+            feedback = atk_lib.null_feedback(byz_mask.shape[0])
+
+        # feedback coupling (DESIGN.md §11): adaptive attacks fold this
+        # step's public defense outputs into the state the next step's
+        # act() will read — the carry keeps the loop scan/vmap-able
+        if attack.observe is not None:
+            attack_state = attack.observe(attack_state, feedback, byz_mask)
 
         # (4) optimizer
         params, opt_state = opt.update(agg, state.opt_state, state.params,

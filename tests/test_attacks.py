@@ -94,3 +94,146 @@ def test_registry_contains_paper_attacks():
                  "safeguard_x0.6", "safeguard_x0.7", "ipm"):
         assert name in reg
     assert reg["label_flip"].data_attack
+
+
+def test_registry_contains_adaptive_attacks():
+    reg = atk.make_registry()
+    for name in ("adaptive_flip", "adaptive_variance", "oscillating",
+                 "median_capture"):
+        assert name in reg
+        assert reg[name].adaptive and reg[name].init is not None
+
+
+def test_registry_burst_window_derived_from_steps():
+    """burst_start=None derives the window from the trial length so the
+    burst always fires; an explicit unfireable window fails loudly."""
+    reg = atk.make_registry(steps=90)
+    g = grads()
+    # derived start = 90 // 3 = 30: active at t=30, honest at t=0
+    out, _ = reg["burst"].act(g, BYZ, None, jnp.int32(30), None)
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               -5.0 * np.asarray(g["w"][0]), rtol=1e-6)
+    out, _ = reg["burst"].act(g, BYZ, None, jnp.int32(0), None)
+    np.testing.assert_array_equal(np.asarray(out["w"][0]),
+                                  np.asarray(g["w"][0]))
+    with pytest.raises(ValueError, match="never fire"):
+        atk.make_registry(burst_start=200, steps=100)
+
+
+# ------------------------------------------------- feedback-coupled attacks
+
+
+def fb(m=M, **kw):
+    out = atk.null_feedback(m)
+    out.update({k: jnp.asarray(v) for k, v in kw.items()})
+    return out
+
+
+def test_null_feedback_shapes():
+    f = atk.null_feedback(M)
+    assert f["good"].shape == (M,) and bool(f["good"].all())
+    assert f["dist_to_med"].shape == (M,)
+    assert float(f["threshold"]) == pytest.approx(atk.OPEN_LOOP_THRESHOLD,
+                                                  rel=1e-6)
+
+
+def test_adaptive_flip_ramps_against_no_defense():
+    attack = atk.make_adaptive_flip(init_scale=0.2, up=1.08)
+    state = attack.init(None)
+    for _ in range(100):
+        state = attack.observe(state, fb(), BYZ)
+    # unbounded headroom: the controller ramps to its aggression cap
+    assert float(state["aggr"]) == pytest.approx(4.0)
+    g = grads()
+    out, _ = attack.act(g, BYZ, state, jnp.int32(0), None)
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               -3.0 * np.asarray(g["w"][0]), rtol=1e-5)
+
+
+def test_adaptive_flip_eases_near_threshold_and_backs_off_when_caught():
+    attack = atk.make_adaptive_flip(init_scale=0.5, down=0.5, target=0.8)
+    state = attack.init(None)
+    # colluder at 95% of the live threshold -> ease off (ratio < 1)
+    d = jnp.zeros((M,)).at[0].set(0.95)
+    near = fb(dist_to_med=d, threshold=1.0)
+    s1 = attack.observe(state, near, BYZ)
+    assert float(s1["aggr"]) < float(state["aggr"])
+    # a colluder newly caught -> hard back-off by `down`
+    caught = fb(good=jnp.arange(M) != 0)
+    s2 = attack.observe(state, caught, BYZ)
+    assert float(s2["aggr"]) == pytest.approx(float(state["aggr"]) * 0.5)
+    # the same eviction observed again is not "new": no further back-off
+    s3 = attack.observe(s2, caught, BYZ)
+    assert float(s3["aggr"]) >= float(s2["aggr"])
+
+
+def test_adaptive_flip_tracks_second_guard():
+    """The binding guard governs: headroom on B but a colluder at 95% of
+    the A threshold must still ease off."""
+    attack = atk.make_adaptive_flip(init_scale=0.5)
+    state = attack.init(None)
+    d = jnp.zeros((M,)).at[1].set(1.9)
+    s1 = attack.observe(state, fb(dist_to_med_A=d, threshold_A=2.0), BYZ)
+    assert float(s1["aggr"]) < float(state["aggr"])
+
+
+def test_adaptive_variance_shrinks_z_on_new_eviction():
+    attack = atk.make_adaptive_variance(z_init=0.4, up=1.05, down=0.5)
+    state = attack.init(None)
+    grown = attack.observe(state, fb(), BYZ)
+    assert float(grown["z"]) == pytest.approx(0.4 * 1.05)
+    shrunk = attack.observe(state, fb(good=jnp.arange(M) != 2), BYZ)
+    assert float(shrunk["z"]) == pytest.approx(0.4 * 0.5)
+    # act uses the live z and keeps the collusive mu - z*sigma form
+    g = grads()
+    out, _ = attack.act(g, BYZ, state, jnp.int32(0), None)
+    gw = np.asarray(g["w"][3:])
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               gw.mean(0) - 0.4 * gw.std(0),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_oscillating_hysteresis_and_honest_freeze():
+    attack = atk.make_oscillating(init_scale=1.5, up=1.1, high=0.8,
+                                  low=0.4)
+    state = attack.init(None)
+    g = grads()
+    # attacking phase: byz rows flipped
+    out, _ = attack.act(g, BYZ, state, jnp.int32(0), None)
+    np.testing.assert_allclose(np.asarray(out["w"][0]),
+                               -1.5 * np.asarray(g["w"][0]), rtol=1e-5)
+    # crossing the high-water mark freezes the attack (honest behavior)
+    d = jnp.zeros((M,)).at[0].set(0.9)
+    state = attack.observe(state, fb(dist_to_med=d, threshold=1.0), BYZ)
+    assert float(state["attacking"]) == 0.0
+    assert float(state["scale"]) == pytest.approx(1.5)   # no ramp frozen
+    out, _ = attack.act(g, BYZ, state, jnp.int32(1), None)
+    np.testing.assert_array_equal(np.asarray(out["w"][0]),
+                                  np.asarray(g["w"][0]))
+    # in the hysteresis band the phase holds; below low it resumes and
+    # ramps while the headroom lasts
+    d = jnp.zeros((M,)).at[0].set(0.6)
+    state = attack.observe(state, fb(dist_to_med=d, threshold=1.0), BYZ)
+    assert float(state["attacking"]) == 0.0
+    state = attack.observe(state, fb(), BYZ)
+    assert float(state["attacking"]) == 1.0
+    assert float(state["scale"]) == pytest.approx(1.5 * 1.1)
+
+
+def test_median_capture_greedy_while_holding_median():
+    attack = atk.make_median_capture(eps_init=0.1, up=1.1, down=0.5)
+    state = attack.init(None)
+    # a byzantine worker holds the median -> ramp eps greedily
+    held = attack.observe(state, fb(med=jnp.int32(0)), BYZ)
+    assert float(held["eps"]) == pytest.approx(0.1 * 1.1)
+    # median lost (honest worker) -> retreat toward honest mimicry
+    lost = attack.observe(state, fb(med=jnp.int32(7)), BYZ)
+    assert float(lost["eps"]) == pytest.approx(0.1 * 0.5)
+    # all colluders report the identical (1 - eps) * honest mean
+    g = grads()
+    out, _ = attack.act(g, BYZ, state, jnp.int32(0), None)
+    mu = np.asarray(g["w"][3:]).mean(0)
+    np.testing.assert_allclose(np.asarray(out["w"][0]), 0.9 * mu,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out["w"][0]),
+                                  np.asarray(out["w"][2]))

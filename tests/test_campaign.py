@@ -35,6 +35,17 @@ def test_scenario_id_stable_and_unique():
     assert len(ids) == 5
 
 
+def test_scenario_id_excludes_default_valued_fields():
+    """The store key hashes only non-default fields, so growing Scenario
+    by a defaulted knob later does not orphan previously stored cells."""
+    import hashlib
+    s = Scenario(attack="a", defense="d", steps=99)
+    expect = hashlib.sha256(json.dumps(
+        {"attack": "a", "defense": "d", "steps": 99},
+        sort_keys=True).encode()).hexdigest()[:16]
+    assert scenario_id(s) == expect
+
+
 def test_expand_grid_and_seeds():
     grid = expand_grid(attack=["a1", "a2"], defense=["d1", "d2", "d3"])
     assert len(grid) == 6
@@ -80,7 +91,14 @@ def test_engine_matches_trainer_path():
     for attack, defense in [("sign_flip", "safeguard_double"),
                             ("variance", "coord_median"),
                             ("label_flip", "krum"),
-                            ("sign_flip", "zeno")]:
+                            ("sign_flip", "zeno"),
+                            # adaptive: registry and Scenario share the
+                            # ADAPTIVE_DEFAULTS single source, so the two
+                            # paths must build identical attacks
+                            ("adaptive_flip", "safeguard_double"),
+                            ("adaptive_variance", "safeguard_double"),
+                            ("oscillating", "safeguard_double"),
+                            ("median_capture", "safeguard_double")]:
         scn = common.scenario_for(attack, defense, steps=STEPS, task=task)
         eng = engine.run_scenarios([scn])[scenario_id(scn)]
         loop = common.run_experiment_loop(task, attack, defense,
@@ -110,6 +128,86 @@ def test_stateful_attacks_vmap_bitexact():
                     (attack, s.seed, key)
             assert np.array_equal(b["final_good"], u["final_good"])
             assert b["acc"] == u["acc"]
+
+
+def test_adaptive_attacks_vmap_bitexact():
+    """Tentpole acceptance: feedback-coupled attack states (controller
+    scalars updated from the previous step's safeguard outputs) batch
+    correctly — vmapped lanes match the unbatched trajectory
+    bit-for-bit."""
+    for attack in ("adaptive_flip", "median_capture"):
+        scns = [Scenario(attack=attack, defense="safeguard_double",
+                         steps=STEPS, seed=k) for k in range(3)]
+        assert len(engine.group_scenarios(scns)) == 1
+        batched = engine.run_scenarios(scns, batched=True)
+        unbatched = engine.run_scenarios(scns, batched=False)
+        for s in scns:
+            b, u = batched[scenario_id(s)], unbatched[scenario_id(s)]
+            for key in b["traces"]:
+                assert np.array_equal(b["traces"][key], u["traces"][key]), \
+                    (attack, s.seed, key)
+            assert np.array_equal(b["final_good"], u["final_good"])
+            assert b["acc"] == u["acc"]
+
+
+def test_adaptive_knobs_are_vmap_axes():
+    """adapt_* controller knobs only feed arithmetic, so all variants run
+    as lanes of one program — and the traced knob changes the outcome."""
+    scns = [Scenario(attack="adaptive_flip", defense="safeguard_double",
+                     steps=STEPS, adapt_target=t, adapt_rate=r)
+            for t, r in ((0.6, 1.05), (0.9, 1.3))]
+    assert len(engine.group_scenarios(scns)) == 1
+    res = engine.run_scenarios(scns)
+    a, b = (res[scenario_id(s)] for s in scns)
+    assert not np.array_equal(a["traces"]["loss"], b["traces"]["loss"])
+
+
+def test_threshold_tracker_under_filter_vs_no_defense():
+    """Acceptance: the threshold-tracking flip hovers under the live
+    eviction threshold (nobody evicted, accuracy within noise of the
+    static safeguard rows) while the same attack destroys the no-defense
+    baseline."""
+    knobs = dict(adapt_init=0.0, adapt_rate=1.05, adapt_target=0.6)
+    seeds = range(2)
+    adaptive_sg = [Scenario(attack="adaptive_flip",
+                            defense="safeguard_double", steps=40, seed=k,
+                            **knobs) for k in seeds]
+    adaptive_mean = [Scenario(attack="adaptive_flip", defense="mean",
+                              steps=40, seed=k, **knobs) for k in seeds]
+    static_sg = [Scenario(attack="safeguard_x0.6",
+                          defense="safeguard_double", steps=40, seed=k)
+                 for k in seeds]
+    res = engine.run_scenarios(adaptive_sg + adaptive_mean + static_sg)
+
+    for s in adaptive_sg:     # stays under the filter: nobody evicted
+        assert res[scenario_id(s)]["caught_byz"] == 0, s.seed
+        assert res[scenario_id(s)]["evicted_honest"] == 0, s.seed
+
+    def acc_mean(scns):
+        return float(np.mean([res[scenario_id(s)]["acc"] for s in scns]))
+
+    sg_adaptive, sg_static = acc_mean(adaptive_sg), acc_mean(static_sg)
+    no_defense = acc_mean(adaptive_mean)
+    assert sg_adaptive > sg_static - 0.08     # within noise of static rows
+    assert no_defense < 0.15                  # baseline driven to ~chance
+    assert sg_adaptive - no_defense > 0.2
+
+
+def test_burst_window_derives_from_trial_length():
+    """Satellite: the default burst window follows the trial length, so a
+    short (CI-scale) campaign still exercises the burst instead of
+    silently benchmarking honest execution."""
+    scn = Scenario(attack="burst", defense="safeguard_double", steps=STEPS)
+    assert scn.burst_start == -1              # auto
+    rec = engine.run_scenarios([scn])[scenario_id(scn)]
+    assert rec["traces"]["caught_byz"].max() > 0   # the burst fired
+
+
+def test_burst_that_cannot_fire_fails_loudly():
+    scn = Scenario(attack="burst", defense="safeguard_double", steps=20,
+                   burst_start=100)
+    with pytest.raises(ValueError, match="never fire"):
+        engine.run_scenarios([scn])
 
 
 def test_threshold_floor_is_a_vmap_axis():

@@ -124,6 +124,39 @@ def test_safeguard_permutation_equivariance(seed):
                                   np.asarray(permuted))
 
 
+@given(st.floats(1e2, 1e5), st.integers(2, 10),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_near_duplicate_rows_never_nan_any_sqdist_path(mag, m, seed):
+    """NaN regression (ISSUE 3): near-duplicate large-magnitude rows make
+    ``diag_i + diag_j - 2 G_ij`` cancel below zero in f32; every sqdist
+    producer must clamp at 0 so ``sqrt`` never sees a negative — a NaN
+    distance compares False against the threshold and silently evicts
+    honest workers."""
+    d = 256
+    key = jax.random.PRNGKey(seed)
+    base = mag * jax.random.normal(key, (1, d))
+    rows = base + 1e-6 * mag * jax.random.normal(
+        jax.random.fold_in(key, 1), (m, d))
+    from repro.kernels.safeguard_filter import (fused_accumulate_sqdist,
+                                                pairwise_sqdist)
+    from repro.kernels.safeguard_filter import ref as sf_ref
+    outs = {
+        "pallas": pairwise_sqdist(rows),
+        "ref": sf_ref.pairwise_sqdist(rows),
+        "tree": tu.tree_pairwise_sqdist({"x": rows}),
+        "fused": fused_accumulate_sqdist(
+            jnp.zeros_like(rows), rows, 0, 1.0)[1],
+        "sketch": sk.sketch_pairwise_sqdist(
+            sk.sketch_tree({"x": rows}, k=128, reps=2)),
+    }
+    for name, sq in outs.items():
+        sq = np.asarray(sq)
+        assert np.isfinite(sq).all(), name
+        assert (sq >= 0).all(), name
+        assert np.isfinite(np.sqrt(sq)).all(), name
+
+
 @given(hnp.arrays(np.float32, st.tuples(st.integers(2, 6),
                                         st.integers(64, 256)),
                   elements=finite))

@@ -74,6 +74,27 @@ def test_reset_period_restores_workers():
     assert bool(st.good.all())
 
 
+def test_reset_clears_evicted_at_and_reports_restored():
+    """A Section-5 periodic reset must clear the ``evicted_at`` diagnostic
+    of the workers it restores (otherwise post-reset eviction times and
+    the fig2b trace misreport) and surface the restore in the info dict."""
+    cfg = SafeguardConfig(m=M, T0=10, T1=20, threshold_floor=0.5,
+                          reset_period=30)
+    byz = jnp.arange(M) < 3
+    attack = atk.make_burst(start=0, length=10, burst_scale=5.0)
+    st, _, infos = run(cfg, attack, byz, 35)
+    # evicted during the burst, with recorded eviction times...
+    assert not bool(infos[12]["good"][:3].all())
+    # ...the reset at t=30 reports exactly the restored workers...
+    restored = infos[30]["restored"]
+    assert bool(restored[:3].any()) and not bool(restored[3:].any())
+    assert not bool(infos[29]["restored"].any())
+    # ...and clears their eviction-time diagnostic (attack long over, so
+    # nobody is re-evicted afterwards)
+    assert bool(st.good.all())
+    assert bool((st.evicted_at == -1).all())
+
+
 def test_aggregate_excludes_evicted():
     cfg = SafeguardConfig(m=M, T0=20, T1=60, threshold_floor=0.5,
                           aggregate_prefilter=False)

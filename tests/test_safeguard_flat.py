@@ -92,6 +92,84 @@ def test_flat_matches_stacked_with_reset_period():
                                       np.asarray(ref.good), err_msg=str(key))
 
 
+@pytest.mark.parametrize("mag", [1e2, 1e4])
+def test_sqdist_producers_clamp_at_zero(mag, rng):
+    """NaN regression, producer level (deterministic twin of the
+    hypothesis property test): near-duplicate large-magnitude rows push
+    ``diag_i + diag_j - 2 G_ij`` into f32 cancellation; every sqdist
+    producer must clamp at 0 so the filter's ``sqrt`` never sees a
+    negative."""
+    from repro.core import sketch as sk
+    from repro.core import tree_utils as tu
+    from repro.kernels.safeguard_filter import pairwise_sqdist
+    m, d = 8, 256
+    k1, k2 = jax.random.split(rng)
+    rows = (mag * jax.random.normal(k1, (1, d))
+            + 1e-6 * mag * jax.random.normal(k2, (m, d)))
+    outs = {
+        "pallas": pairwise_sqdist(rows),
+        "ref": sf_ref.pairwise_sqdist(rows),
+        "tree": tu.tree_pairwise_sqdist({"x": rows}),
+        "fused": fused_accumulate_sqdist(
+            jnp.zeros_like(rows), rows, 0, 1.0)[1],
+        "sketch": sk.sketch_pairwise_sqdist(
+            sk.sketch_tree({"x": rows}, k=128, reps=2)),
+    }
+    for name, sq in outs.items():
+        sq = np.asarray(sq)
+        assert np.isfinite(sq).all(), name
+        assert (sq >= 0).all(), name
+        assert np.isfinite(np.sqrt(sq)).all(), name
+
+
+def test_near_duplicate_grads_no_nan_and_identical_decisions():
+    """NaN regression through the full safeguard step: near-duplicate
+    large-magnitude gradients drive the accumulator rows into the f32
+    cancellation regime on every backend (and the sketched path); no
+    distance may go NaN, no honest worker may be evicted, and all
+    backends must agree on the decisions bit-for-bit.
+
+    The threshold floor sits well above the f32 cancellation noise
+    (distances here are ~pure rounding error, a few units at mu=1e3):
+    pre-clamp, a negative sqdist turns into a NaN distance that compares
+    False against ANY threshold and silently evicts — which is exactly
+    what this test locks out."""
+    byz = jnp.zeros((M,), bool)
+
+    def near_dup_grads(key):
+        ks = iter(list(jax.random.split(
+            key, len(jax.tree_util.tree_leaves(PARAMS)))))
+        return jax.tree.map(
+            lambda p: 1e3 * (1.0 + 1e-6 * jax.random.normal(
+                next(ks), (M,) + p.shape)), PARAMS)
+
+    outs = {}
+    grid = ENGINE_GRID + [("sketch", "pallas")]
+    for engine, backend in grid:
+        kwargs = dict(m=M, T0=20, T1=60, threshold_floor=100.0)
+        if engine == "sketch":
+            cfg = SafeguardConfig(use_sketch=True, sketch_k=512,
+                                  sketch_reps=4, **kwargs)
+        else:
+            cfg = SafeguardConfig(engine=engine, backend=backend, **kwargs)
+        st = init_state(cfg, PARAMS)
+        key = jax.random.PRNGKey(0)
+        step = jax.jit(lambda s, g, c=cfg: safeguard_step(s, g, c))
+        for t in range(10):
+            key, k = jax.random.split(key)
+            st, agg, info = step(st, near_dup_grads(k))
+            assert bool(jnp.isfinite(info["dist_to_med_B"]).all()), \
+                (engine, backend, t)
+            assert bool(jnp.isfinite(info["threshold_B"])), (engine, backend)
+        assert bool(st.good.all()), (engine, backend)
+        for leaf in jax.tree_util.tree_leaves(agg):
+            assert bool(jnp.isfinite(leaf).all()), (engine, backend)
+        outs[(engine, backend)] = np.asarray(st.good)
+    ref = outs[("stacked", "pallas")]
+    for k, good in outs.items():
+        np.testing.assert_array_equal(good, ref, err_msg=str(k))
+
+
 def test_flat_accumulator_equals_stacked_accumulator():
     """The buffer itself (not just decisions) matches: unflattening the
     flat accumulator row reproduces the stacked accumulator leaf."""

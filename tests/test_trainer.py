@@ -101,6 +101,19 @@ def test_zeno_scores_sign():
     assert float(scores[0]) > float(scores[1])
 
 
+def test_adaptive_attack_state_threads_through_trainer(task):
+    """The feedback loop closes through the Trainer path too: the
+    adaptive controller state moves away from its init (observe absorbed
+    the safeguard's public outputs) and survives as the scan/vmap-stable
+    scalar pytree."""
+    st, acc = run(task, "adaptive_flip", "safeguard", steps=30)
+    assert st.attack_state["aggr"].shape == ()
+    assert float(st.attack_state["aggr"]) != pytest.approx(1.2)  # moved
+    # ...and against a filterless baseline it ramps to the cap
+    st, _ = run(task, "adaptive_flip", "mean", steps=60)
+    assert float(st.attack_state["aggr"]) == pytest.approx(4.0)
+
+
 def test_transient_failure_recovery(task):
     """Section 5 / Figure 2(b): with periodic reset, a worker that fails
     transiently is readmitted and contributes again."""
