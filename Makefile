@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast bench-quick bench-overhead campaign-smoke \
-	adaptive-smoke lint dryrun-smoke
+	adaptive-smoke defense-smoke lint dryrun-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -28,6 +28,13 @@ campaign-smoke:
 # the CI adaptive step: feedback-coupled adversaries end-to-end (DESIGN.md §11)
 adaptive-smoke:
 	$(PY) -m repro.campaign.run --campaign adaptive --quick --seeds 2
+
+# the CI defense-zoo step (DESIGN.md §12): new stateful defenses x
+# {variance, adaptive_flip}, then assert the store resumes with 0 new cells
+defense-smoke:
+	$(PY) -m repro.campaign.run --campaign defense --quick --seeds 2
+	$(PY) -m repro.campaign.run --campaign defense --quick --seeds 2 \
+	    | grep -q "new_cells=0"
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

@@ -26,9 +26,9 @@ from repro.campaign.engine import EVAL_BATCH, EVAL_KEY
 from repro.campaign.scenario import (Scenario, TABLE1_ATTACKS,
                                      TABLE1_DEFENSES, scenario_id)
 from repro.configs.base import TrainConfig
-from repro.core import SafeguardConfig
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk_lib
+from repro.core import defenses as dfn_lib
 from repro.data import tasks
 from repro.optim import make_optimizer
 from repro.train import Trainer, init_train_state, make_train_step
@@ -41,13 +41,13 @@ ATTACKS = list(TABLE1_ATTACKS)
 DEFENSES = list(TABLE1_DEFENSES)
 
 
-def make_defense(name: str, *, t0=20, t1=120, floor=0.1, reset_period=0):
-    if name.startswith("safeguard"):
-        return SafeguardConfig(
-            m=M, T0=t0, T1=t1,
-            mode="single" if name.endswith("single") else "double",
-            threshold_floor=floor, reset_period=reset_period), None
-    return None, agg_lib.make_registry(N_BYZ, M)[name]
+def make_defense(name: str, *, t0=20, t1=120, floor=0.1, reset_period=0
+                 ) -> dfn_lib.Defense:
+    """The benchmark protocol's defense instances (unified registry,
+    DESIGN.md §12)."""
+    return dfn_lib.make_registry(M, N_BYZ, T0=t0, T1=t1,
+                                 threshold_floor=floor,
+                                 reset_period=reset_period)[name]
 
 
 def scenario_for(attack_name: str, defense_name: str, *, steps: int = 150,
@@ -99,19 +99,17 @@ def run_experiment_loop(task, attack_name: str, defense_name: str, *,
     # (and an unfireable explicit window fails loudly) — same derivation
     # as the engine path, keeping the two bit-identical
     attack = atk_lib.make_registry(delay=32, steps=steps)[attack_name]
-    sg_cfg, aggregator = make_defense(defense_name,
-                                      reset_period=reset_period)
+    defense = make_defense(defense_name, reset_period=reset_period)
     opt = make_optimizer(TrainConfig(lr=lr))
     params = tasks.student_init(task, seed=seed + 1)
-    state = init_train_state(params, opt, sg_cfg=sg_cfg, attack=attack,
+    state = init_train_state(params, opt, defense=defense, attack=attack,
                              seed=seed)
     step = make_train_step(tasks.mlp_loss, opt, byz_mask=BYZ,
-                           sg_cfg=sg_cfg, aggregator=aggregator,
-                           attack=attack)
+                           defense=defense, attack=attack)
     flip = BYZ if attack.data_attack else None
     it = tasks.teacher_batches(task, batch, seed=seed, m=M, flip_mask=flip)
     held = (tasks.teacher_batches(task, 10, seed=seed + 7)
-            if aggregator is not None and aggregator.needs_scores else None)
+            if defense.needs_held_batch else None)
     tr = Trainer(state, step, it, held_iter=held, log_every=10 ** 9,
                  name=f"{attack_name}/{defense_name}")
     t0_wall = time.time()
@@ -131,8 +129,8 @@ def run_experiment_loop(task, attack_name: str, defense_name: str, *,
     acc = float(tasks.mlp_accuracy(tr.state.params, eval_b))
     out = {"attack": attack_name, "defense": defense_name, "acc": acc,
            "steps": steps, "wall_s": round(wall, 2)}
-    if tr.state.sg_state is not None:
-        good = tr.state.sg_state.good
+    good = dfn_lib.final_good(tr.state.defense_state)
+    if good is not None:
         out["caught_byz"] = int((BYZ & ~good).sum())
         out["evicted_honest"] = int((~BYZ & ~good).sum())
     return out

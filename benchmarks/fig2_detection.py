@@ -56,7 +56,7 @@ def run(steps: int = 200, out_dir: str = "experiments/bench"):
                                            st.step)
         from repro.train.trainer import TrainState
         st = TrainState(params=new_params, opt_state=opt_state,
-                        sg_state=sg_state, attack_state=astate,
+                        defense_state=sg_state, attack_state=astate,
                         step=st.step + 1, rng=st.rng)
         d = np.asarray(info["dist_to_med_B"])
         stats.append((float(d[:common.N_BYZ].mean()),

@@ -24,7 +24,8 @@ import statistics
 from typing import Dict, List, Sequence, Tuple
 
 from repro.campaign import engine
-from repro.campaign.scenario import ADAPTIVE_ATTACKS, Scenario, scenario_id
+from repro.campaign.scenario import (ADAPTIVE_ATTACKS, ZOO_DEFENSES,
+                                     Scenario, scenario_id)
 from repro.data import tasks
 from benchmarks import common
 
@@ -53,21 +54,24 @@ def build_rows(scenarios: Sequence[Scenario],
 
 
 def run(steps: int = 150, out_dir: str = "experiments/bench",
-        seeds: int = 1, adaptive: bool = True):
+        seeds: int = 1, adaptive: bool = True, zoo: bool = True):
     """``adaptive=True`` appends the feedback-coupled adversary rows
-    (DESIGN.md §11) below the paper's static grid."""
+    (DESIGN.md §11) below the paper's static grid; ``zoo=True`` appends
+    the history-aware defense-zoo columns (DESIGN.md §12) — centered
+    clipping must survive the variance attack that degrades ``mean``."""
     task = tasks.make_teacher_task()
     ideal = common.ideal_accuracy(task, steps=steps)
     attacks = list(common.ATTACKS) + (list(ADAPTIVE_ATTACKS) if adaptive
                                       else [])
+    defenses = list(common.DEFENSES) + (list(ZOO_DEFENSES) if zoo else [])
     scenarios = [common.scenario_for(a, d, steps=steps, seed=k, task=task)
-                 for a in attacks for d in common.DEFENSES
+                 for a in attacks for d in defenses
                  for k in range(seeds)]
     results = engine.run_scenarios(scenarios, verbose=True)
     rows = build_rows(scenarios, results)
     cells = {(r["attack"], r["defense"]): r for r in rows}
     for attack in attacks:
-        for defense in common.DEFENSES:
+        for defense in defenses:
             r = cells[(attack, defense)]
             print(f"table1,{attack},{defense},{r['acc']:.4f},"
                   f"caught={r.get('caught_byz', '-')}")
@@ -78,12 +82,12 @@ def run(steps: int = 150, out_dir: str = "experiments/bench",
 
     # markdown table — mean±std over seeds
     print(f"\nideal accuracy (honest-only SGD): {ideal:.4f}\n")
-    header = "| attack | " + " | ".join(common.DEFENSES) + " |"
+    header = "| attack | " + " | ".join(defenses) + " |"
     print(header)
-    print("|" + "---|" * (len(common.DEFENSES) + 1))
+    print("|" + "---|" * (len(defenses) + 1))
     for attack in attacks:
         parts = []
-        for defense in common.DEFENSES:
+        for defense in defenses:
             r = cells[(attack, defense)]
             if seeds > 1:
                 parts.append(f"{r['acc_mean']:.3f}±{r['acc_std']:.3f}")

@@ -45,7 +45,7 @@ def main():
         params, opt_state = opt.update(agg, state.opt_state, state.params,
                                        state.step)
         state = state.__class__(params=params, opt_state=opt_state,
-                                sg_state=sg_state, attack_state=astate,
+                                defense_state=sg_state, attack_state=astate,
                                 step=state.step + 1, rng=state.rng)
         if t % 25 == 0:
             d = info["dist_to_med_B"]

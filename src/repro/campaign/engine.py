@@ -11,10 +11,11 @@ and ~150 python-dispatched steps per grid cell.  The engine instead:
 2. ``vmap``s the trial over every scenario axis that is a *traced knob*
    rather than program structure — the seed axis always, plus
    ``attack_scale`` (all ``scaled_flip``/``safeguard_x*`` variants),
-   ``threshold_floor`` (safeguard defenses), ``n_byz`` (defenses whose
-   aggregator does not consume b statically) and the ``adapt_*``
-   controller knobs of the feedback-coupled adaptive attacks
-   (DESIGN.md §11);
+   ``threshold_floor`` (safeguard defenses), ``n_byz`` (defenses that do
+   not consume b statically), the ``adapt_*`` controller knobs of the
+   feedback-coupled adaptive attacks (DESIGN.md §11), and the
+   ``clip_tau``/``clip_beta``/``spectral_iters`` knobs of the stateful
+   defense zoo (DESIGN.md §12);
 3. groups scenarios by :func:`batch_key` — everything that changes the
    traced program (attack family, defense, m, steps, windows, task shape)
    — so a 6x7x5-seed Table-1 grid compiles ~35 programs instead of
@@ -42,17 +43,17 @@ import jax.numpy as jnp
 
 from repro.campaign.scenario import Scenario, scenario_id
 from repro.configs.base import TrainConfig
-from repro.core import SafeguardConfig
-from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk_lib
+from repro.core import defenses as dfn_lib
 from repro.data import tasks
 from repro.data.pipeline import flip_labels, worker_split
 from repro.optim import make_optimizer
 from repro.train import init_train_state, make_train_step, scan_trial
 
-# Aggregators that consume n_byz as a static python value (slice/selection
+# Defenses that consume n_byz as a static python value (slice/selection
 # bounds) — n_byz is program structure for them, a vmap knob otherwise.
-STATIC_NBYZ_DEFENSES = frozenset({"trimmed_mean", "krum", "zeno"})
+# Derived from the Defense protocol registry (single source).
+STATIC_NBYZ_DEFENSES = dfn_lib.static_nbyz_names()
 
 EVAL_BATCH = 4000            # final-accuracy eval batch (common.py protocol)
 EVAL_KEY = 10_000
@@ -117,18 +118,21 @@ def _build_attack(family: str, rep: Scenario, knobs) -> atk_lib.Attack:
     return registry[family]
 
 
-def _build_defense(rep: Scenario, floor):
-    """-> (sg_cfg, aggregator); ``floor`` may be a traced scalar — it only
-    feeds the empirical filter's ``scale * max(S, floor)`` arithmetic."""
-    if rep.defense.startswith("safeguard"):
-        mode = "single" if rep.defense.endswith("single") else "double"
-        return SafeguardConfig(m=rep.m, T0=rep.T0, T1=rep.T1, mode=mode,
-                               threshold_floor=floor,
-                               reset_period=rep.reset_period), None
-    reg = agg_lib.make_registry(rep.n_byz, rep.m)
+def _build_defense(rep: Scenario, knobs) -> dfn_lib.Defense:
+    """Instantiate the defense from the vmappable ``knobs`` dict — the
+    floor/clip/spectral knobs (and ``n_byz`` for non-static defenses)
+    may be traced scalars: they only feed arithmetic inside
+    ``Defense.aggregate`` (DESIGN.md §12)."""
+    static = rep.defense in STATIC_NBYZ_DEFENSES
+    reg = dfn_lib.make_registry(
+        rep.m, rep.n_byz if static else knobs["n_byz"],
+        T0=rep.T0, T1=rep.T1, threshold_floor=knobs["threshold_floor"],
+        reset_period=rep.reset_period, clip_tau=knobs["clip_tau"],
+        clip_beta=knobs["clip_beta"],
+        spectral_iters=knobs["spectral_iters"])
     if rep.defense not in reg:
         raise ValueError(f"unknown defense {rep.defense!r}")
-    return None, reg[rep.defense]
+    return reg[rep.defense]
 
 
 def make_trial_fn(rep: Scenario):
@@ -152,14 +156,14 @@ def make_trial_fn(rep: Scenario):
         n_byz = knobs["n_byz"] if dynamic_nbyz else rep.n_byz
         byz_mask = jnp.arange(rep.m) < n_byz
         attack = _build_attack(family, rep, knobs)
-        sg_cfg, aggregator = _build_defense(rep, knobs["threshold_floor"])
+        defense = _build_defense(rep, knobs)
 
         params = tasks.student_init(task, seed=seed + 1)
-        state = init_train_state(params, opt, sg_cfg=sg_cfg, attack=attack,
-                                 seed=seed)
+        state = init_train_state(params, opt, defense=defense,
+                                 attack=attack, seed=seed)
         step_fn = make_train_step(tasks.mlp_loss, opt, byz_mask=byz_mask,
-                                  sg_cfg=sg_cfg, aggregator=aggregator,
-                                  attack=attack, jit=False)
+                                  defense=defense, attack=attack,
+                                  jit=False)
 
         # In-scan data generation, bit-compatible with the python
         # iterator ``tasks.teacher_batches(task, batch, seed, m, flip)``.
@@ -174,7 +178,7 @@ def make_trial_fn(rep: Scenario):
             return out
 
         held_fn = None
-        if aggregator is not None and aggregator.needs_scores:
+        if defense.needs_held_batch:
             def held_fn(t):  # noqa: E306 — teacher_batches(task, 10, seed+7)
                 key = jax.random.fold_in(
                     jax.random.PRNGKey((seed + 7) ^ 0xDA7A), t)
@@ -187,8 +191,8 @@ def make_trial_fn(rep: Scenario):
                                      EVAL_BATCH)
         out = {"acc": tasks.mlp_accuracy(final.params, eval_b),
                "traces": traces}
-        if sg_cfg is not None:
-            good = final.sg_state.good
+        good = dfn_lib.final_good(final.defense_state)
+        if good is not None:
             out["final_good"] = good
             out["caught_byz"] = (byz_mask & ~good).sum()
             out["evicted_honest"] = (~byz_mask & ~good).sum()
@@ -198,6 +202,14 @@ def make_trial_fn(rep: Scenario):
 
 
 def stack_knobs(group: Sequence[Scenario]) -> Dict[str, jax.Array]:
+    for s in group:
+        if s.spectral_iters > dfn_lib.MAX_SPECTRAL_ITERS:
+            # the lane value is traced by the time make_dnc sees it, so
+            # the factory's own concrete-value check cannot fire here
+            raise ValueError(
+                f"spectral_iters={s.spectral_iters} exceeds "
+                f"MAX_SPECTRAL_ITERS={dfn_lib.MAX_SPECTRAL_ITERS} and "
+                "would silently truncate")
     return {
         "seed": jnp.asarray([s.seed for s in group], jnp.int32),
         "attack_scale": jnp.asarray([attack_family(s)[1] for s in group],
@@ -216,6 +228,14 @@ def stack_knobs(group: Sequence[Scenario]) -> Dict[str, jax.Array]:
                                   jnp.float32),
         "adapt_target": jnp.asarray([s.adapt_target for s in group],
                                     jnp.float32),
+        # stateful-defense knobs (DESIGN.md §12) — pure arithmetic inside
+        # Defense.aggregate, so every clip/spectral variant of one
+        # defense is a lane of the same program
+        "clip_tau": jnp.asarray([s.clip_tau for s in group], jnp.float32),
+        "clip_beta": jnp.asarray([s.clip_beta for s in group],
+                                 jnp.float32),
+        "spectral_iters": jnp.asarray([s.spectral_iters for s in group],
+                                      jnp.int32),
     }
 
 

@@ -15,6 +15,9 @@ knob axes into vmap lanes, see ``engine.batch_key``):
   adaptive         feedback-coupled adversaries (DESIGN.md §11) x
                    {safeguard_double, mean} — the adapt_* controller
                    knobs are vmap lanes like seeds
+  defense          the history-aware defense zoo (DESIGN.md §12) x
+                   {variance, adaptive_flip} — clip/spectral knobs are
+                   vmap lanes like seeds
   smoke            2x2 mini-grid for CI / tests
 
 A second invocation with the same arguments runs 0 new cells (the store
@@ -31,7 +34,8 @@ from typing import Callable, Dict, List
 from repro.campaign import engine
 from repro.campaign.scenario import (ADAPTIVE_ATTACKS, Scenario,
                                      TABLE1_ATTACKS, TABLE1_DEFENSES,
-                                     expand_grid, scenario_id, with_seeds)
+                                     ZOO_DEFENSES, expand_grid,
+                                     scenario_id, with_seeds)
 from repro.campaign.store import DEFAULT_ROOT, CampaignStore
 
 
@@ -62,6 +66,15 @@ def _threshold_sweep(seeds: int, steps: int) -> List[Scenario]:
     return with_seeds(grid, seeds)
 
 
+def _defense(seeds: int, steps: int) -> List[Scenario]:
+    """The history-aware defense zoo (DESIGN.md §12) under the attack the
+    paper says historyless defenses cannot survive (variance) and the
+    strongest feedback-coupled adversary (adaptive_flip)."""
+    grid = expand_grid(attack=["variance", "adaptive_flip"],
+                       defense=list(ZOO_DEFENSES), steps=[steps])
+    return with_seeds(grid, seeds)
+
+
 def _adaptive(seeds: int, steps: int) -> List[Scenario]:
     """Feedback-coupled adversaries (DESIGN.md §11) against the safeguard
     and the no-defense baseline: the threshold tracker must degrade
@@ -84,6 +97,7 @@ CAMPAIGNS: Dict[str, Callable[[int, int], List[Scenario]]] = {
     "alpha_sweep": _alpha_sweep,
     "threshold_sweep": _threshold_sweep,
     "adaptive": _adaptive,
+    "defense": _defense,
     "smoke": _smoke,
 }
 

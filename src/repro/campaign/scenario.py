@@ -16,11 +16,12 @@ Grid helpers:
   (``expand_grid(attack=ATTACKS, defense=DEFENSES, seed=range(5))``);
 * :func:`with_seeds` — replicate a scenario list over ``n`` seeds.
 
-The attack/defense *names* are the registry names of ``core.attacks`` /
-``core.aggregators`` plus the ``safeguard_*`` defense family; the
-``safeguard_x<scale>`` attacks normalize to the ``scaled_flip`` family
-with a numeric ``attack_scale`` so the engine can batch them into one
-vmapped program (``engine.batch_key``).
+The attack/defense *names* are the registry names of ``core.attacks``
+and ``core.defenses`` (the unified Defense protocol, DESIGN.md §12 —
+historyless baselines, both safeguard variants, and the stateful zoo);
+the ``safeguard_x<scale>`` attacks normalize to the ``scaled_flip``
+family with a numeric ``attack_scale`` so the engine can batch them
+into one vmapped program (``engine.batch_key``).
 """
 
 from __future__ import annotations
@@ -31,7 +32,8 @@ import itertools
 import json
 from typing import Dict, Iterable, List, Sequence
 
-from repro.core.attacks import ADAPTIVE_DEFAULTS
+from repro.core.attacks import ADAPTIVE_DEFAULTS, VARIANCE_Z
+from repro.core.defenses import DEFENSE_DEFAULTS
 
 # The paper's Table 1 grid (Section 5 / Appendix C) — canonical lists,
 # re-exported by benchmarks.common for back-compat.
@@ -43,6 +45,9 @@ TABLE1_DEFENSES = ("safeguard_single", "safeguard_double", "coord_median",
 # core.attacks registry; their adapt_* knobs are vmap axes.
 ADAPTIVE_ATTACKS = ("adaptive_flip", "adaptive_variance", "oscillating",
                     "median_capture")
+# History-aware defense zoo (DESIGN.md §12) — stateful defenses beyond
+# the paper's grid; their clip/spectral knobs are vmap axes.
+ZOO_DEFENSES = ("centered_clip", "norm_filter", "dnc", "safeguard_cclip")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +84,13 @@ class Scenario:
     adapt_rate: float = ADAPTIVE_DEFAULTS["adapt_rate"]
     adapt_down: float = ADAPTIVE_DEFAULTS["adapt_down"]
     adapt_target: float = ADAPTIVE_DEFAULTS["adapt_target"]
+    # stateful-defense knobs (vmap axes, engine.stack_knobs): centered
+    # clipping radius/momentum and the DnC power-iteration budget —
+    # defaults are the single source shared with the defense factories
+    # (core.defenses.DEFENSE_DEFAULTS)
+    clip_tau: float = DEFENSE_DEFAULTS["clip_tau"]
+    clip_beta: float = DEFENSE_DEFAULTS["clip_beta"]
+    spectral_iters: int = DEFENSE_DEFAULTS["spectral_iters"]
     # teacher-student task shape
     d_in: int = 32
     d_hidden: int = 64
@@ -104,11 +116,20 @@ def scenario_id(s: Scenario) -> str:
     Fields sitting at their default value are EXCLUDED from the hash
     blob, so growing ``Scenario`` by a new defaulted knob later does not
     re-key (and thereby orphan) every previously stored cell whose
-    execution is unchanged."""
-    blob = json.dumps(
-        {k: v for k, v in s.asdict().items()
-         if _FIELD_DEFAULTS.get(k, _MISSING) != v},
-        sort_keys=True)
+    execution is unchanged.
+
+    Constants that change a cell's *semantics* without being Scenario
+    fields are folded into the hash for exactly the cells they govern:
+    the variance attack's collusion strength ``attacks.VARIANCE_Z`` is
+    part of every ``variance`` cell's key, so recalibrating it (z 0.3 ->
+    1.5 in this repo's history) orphans precisely the stale variance
+    rows of a persisted store instead of silently mixing strengths in a
+    resumed grid."""
+    fields = {k: v for k, v in s.asdict().items()
+              if _FIELD_DEFAULTS.get(k, _MISSING) != v}
+    if s.attack == "variance":
+        fields["_variance_z"] = VARIANCE_Z
+    blob = json.dumps(fields, sort_keys=True)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 

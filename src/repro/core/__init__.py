@@ -5,5 +5,7 @@ from repro.core.safeguard import (    # noqa: F401
     SafeguardConfig, SafeguardState, init_state, safeguard_step)
 from repro.core import aggregators    # noqa: F401
 from repro.core import attacks        # noqa: F401
+from repro.core import defenses       # noqa: F401
 from repro.core import tree_utils     # noqa: F401
 from repro.core import sketch         # noqa: F401
+from repro.core.defenses import Defense  # noqa: F401

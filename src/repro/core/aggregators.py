@@ -8,6 +8,9 @@ property the variance attack [Baruch et al. 2019] exploits and the
 safeguard's windowed accumulators fix.
 
 Interface: stacked pytree (leaves ``(m, ...)``) -> parameter pytree.
+These pure functions are the numerics oracles; the trainer/campaign
+consume them as stateless instances of the unified Defense protocol
+(``core.defenses``, DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -56,26 +59,34 @@ def geometric_medoid(grads):
 
 
 def geometric_median(grads, iters: int = 8, eps: float = 1e-8):
-    """True geometric median via Weiszfeld iterations (smoothed)."""
+    """True geometric median via Weiszfeld iterations (smoothed).
+
+    The iterate is carried in f32 across ALL scan steps and cast to the
+    gradient dtype exactly once at the end — a per-step round trip
+    through bf16/f16 grads would re-quantize the fixed point every
+    iteration and stall convergence at the low-precision grid.  The
+    weights guard against ``w.sum() == 0`` (every distance overflowing
+    to inf for huge-magnitude inputs makes every weight 0, and ``w /
+    w.sum()`` would turn the whole iterate into NaN).
+    """
     m = tu.tree_worker_count(grads)
-    y = mean(grads)
+    grads32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    y0 = jax.tree.map(lambda g: g.mean(axis=0), grads32)
 
     def body(y, _):
         # distances ||g_i - y||
         def dist_sq_leaf(g, c):
-            d = (g.astype(jnp.float32) - c.astype(jnp.float32)[None])
+            d = g - c[None]
             return (d * d).reshape(m, -1).sum(axis=1)
-        parts = jax.tree.map(dist_sq_leaf, grads, y)
+        parts = jax.tree.map(dist_sq_leaf, grads32, y)
         dist = jnp.sqrt(sum(jax.tree_util.tree_leaves(parts)) + eps)
         w = 1.0 / dist
-        w = w / w.sum()
-        y_new = jax.tree.map(
-            lambda g: jnp.tensordot(w, g.astype(jnp.float32), axes=1
-                                    ).astype(g.dtype), grads)
+        w = w / jnp.maximum(w.sum(), jnp.float32(1e-30))
+        y_new = jax.tree.map(lambda g: jnp.tensordot(w, g, axes=1), grads32)
         return y_new, None
 
-    y, _ = jax.lax.scan(body, y, None, length=iters)
-    return y
+    y, _ = jax.lax.scan(body, y0, None, length=iters)
+    return jax.tree.map(lambda yl, g: yl.astype(g.dtype), y, grads)
 
 
 def krum(grads, n_byz: int):
@@ -111,7 +122,8 @@ def zeno_score(loss_before: jax.Array, loss_after: jax.Array,
 
 
 # --------------------------------------------------------------------------
-# Registry used by the trainer / benchmarks
+# Legacy registry (kept for back-compat; the unified protocol registry
+# lives in core.defenses.make_registry)
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -124,7 +136,8 @@ class Aggregator:
 
 def make_registry(n_byz: int, m: int):
     """Aggregators parameterized the way the paper runs them (b = alpha*m)."""
-    trim = min(n_byz, (m - 1) // 2)
+    from repro.core.defenses import derive_trim   # single trim source
+    trim = derive_trim(n_byz, m)
     return {
         "mean": Aggregator("mean", mean),
         "coord_median": Aggregator("coord_median", coordinate_median),

@@ -77,6 +77,15 @@ f32 = jnp.float32
 # to their cap.  Finite (not inf) so ratio arithmetic stays NaN-free.
 OPEN_LOOP_THRESHOLD = 1e30
 
+# Collusion strength of the static variance attack: ``mu - z * sigma``
+# per coordinate.  z = 1.5 keeps every Byzantine coordinate well inside
+# the 3-sigma population envelope (statistical plausibility within one
+# step) while actually producing the paper's Table-1 picture at the
+# CPU protocol scale — historyless baselines degrade measurably, the
+# safeguard's windowed accumulators catch the drift.  It is the same
+# cap the eviction-aware ``adaptive_variance`` ramps toward (z_max).
+VARIANCE_Z = 1.5
+
 # Controller defaults shared by the adaptive-attack factories below AND
 # the campaign layer's ``Scenario.adapt_*`` fields — single source, so
 # the legacy Trainer path (registry defaults) and the campaign engine
@@ -151,6 +160,25 @@ def feedback_from_info(info: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
     }
 
 
+def defense_feedback(info: Dict[str, jax.Array], m: int
+                     ) -> Dict[str, jax.Array]:
+    """Project ANY defense's info dict (the unified protocol,
+    ``core.defenses``) onto the public feedback surface.  Defenses that
+    publish the full safeguard keys get the full projection; filtering
+    defenses that only publish a membership mask (norm filter, DnC)
+    expose their evictions through ``good``/``n_good`` over the
+    open-loop defaults; pure-aggregation defenses reduce exactly to
+    :func:`null_feedback`."""
+    if "threshold_B" in info:
+        return feedback_from_info(info)
+    fb = null_feedback(m)
+    if "good" in info:
+        fb["good"] = info["good"]
+    if "n_good" in info:
+        fb["n_good"] = jnp.asarray(info["n_good"], f32)
+    return fb
+
+
 def _byz_dist_frac(fb, byz_mask):
     """Worst colluder's distance as a fraction of the live threshold,
     across BOTH guards (the binding one governs) — evicted colluders no
@@ -189,7 +217,7 @@ def make_scaled_flip(scale: float):
     return attack
 
 
-def make_variance_attack(z_max: float = 0.3, direction: float = -1.0):
+def make_variance_attack(z_max: float = VARIANCE_Z, direction: float = -1.0):
     """[Baruch et al.] all Byzantine workers collude on ``mu + dir*z*sigma``."""
     def attack(grads, byz_mask, state, step, rng):
         mu, sd = _honest_stats(grads, byz_mask)
@@ -340,7 +368,7 @@ def make_adaptive_flip(init_scale=ADAPTIVE_DEFAULTS["adapt_init"],
 def make_adaptive_variance(z_init=ADAPTIVE_DEFAULTS["adapt_init"],
                            up=ADAPTIVE_DEFAULTS["adapt_rate"],
                            down=ADAPTIVE_DEFAULTS["adapt_down"],
-                           z_min: float = 0.01, z_max: float = 1.5
+                           z_min: float = 0.01, z_max: float = VARIANCE_Z
                            ) -> Attack:
     """Eviction-aware [Baruch et al.]: collude on ``mu - z * sigma`` with
     ``z`` shrinking by ``down`` whenever a colluder is newly caught and
@@ -477,7 +505,7 @@ def make_registry(delay: int = 64, burst_start: Optional[int] = None,
         "sign_flip": Attack("sign_flip", attack_sign_flip),
         "safeguard_x0.6": Attack("safeguard_x0.6", make_scaled_flip(0.6)),
         "safeguard_x0.7": Attack("safeguard_x0.7", make_scaled_flip(0.7)),
-        "variance": Attack("variance", make_variance_attack(0.3)),
+        "variance": Attack("variance", make_variance_attack(VARIANCE_Z)),
         "ipm": Attack("ipm", make_ipm(1.0)),
         "delayed": Attack("delayed", delayed, init=delayed.init),
         "burst": Attack("burst",

@@ -34,6 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig, TrainConfig
 from repro.core import aggregators as agg_lib
+from repro.core import defenses as dfn_lib
 from repro.core import safeguard as sg
 from repro.launch import mesh as mesh_lib
 from repro.launch import sharding as sh
@@ -78,20 +79,21 @@ def build_train(cfg: ModelConfig, shape: InputShape, mesh, *,
     waxes = mesh_lib.worker_axes(mesh)
     spmd = waxes if len(waxes) > 1 else waxes[0]
     if sg_cfg is not None:
-        sg_acc_sharding = None
-        if not sg_cfg.use_sketch and sg_cfg.engine == "flat":
-            layout = sg.make_layout(T.init_abstract(cfg))
-            sg_acc_sharding = NamedSharding(
-                mesh, sh.flat_acc_pspec(mesh, layout.d_padded))
-        step = tr.make_train_step(loss, opt, byz_mask=jnp.zeros((m,), bool),
-                                  sg_cfg=sg_cfg, spmd_axis_name=spmd,
-                                  sg_acc_sharding=sg_acc_sharding,
-                                  jit=False)
+        defense = dfn_lib.make_safeguard_defense(sg_cfg)
     else:
-        step = tr.make_train_step(
-            loss, opt, byz_mask=jnp.zeros((m,), bool),
-            aggregator=agg_lib.Aggregator("mean", agg_lib.mean),
-            spmd_axis_name=spmd, jit=False)
+        defense = dfn_lib.from_aggregator(
+            agg_lib.Aggregator("mean", agg_lib.mean))
+    acc_sharding = None
+    if defense.flat_state:
+        # flat (m, d_pad) defense state: worker rows on the data axes,
+        # feature columns on model (DESIGN.md §3/§6) — one rule for every
+        # flat-buffer defense, not a safeguard special case
+        layout = sg.make_layout(T.init_abstract(cfg))
+        acc_sharding = NamedSharding(
+            mesh, sh.flat_acc_pspec(mesh, layout.d_padded))
+    step = tr.make_train_step(loss, opt, byz_mask=jnp.zeros((m,), bool),
+                              defense=defense, spmd_axis_name=spmd,
+                              acc_sharding=acc_sharding, jit=False)
 
     # ---- abstract state with shardings --------------------------------
     params_a = T.init_abstract(cfg)
@@ -113,7 +115,8 @@ def build_train(cfg: ModelConfig, shape: InputShape, mesh, *,
 
     rng_a = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     state_s = tr.TrainState(
-        params=params_s, opt_state=opt_s, sg_state=sg_s, attack_state=None,
+        params=params_s, opt_state=opt_s, defense_state=sg_s,
+        attack_state=None,
         step=jax.ShapeDtypeStruct((), jnp.int32,
                                   sharding=NamedSharding(mesh, P())),
         rng=jax.ShapeDtypeStruct(rng_a.shape, rng_a.dtype,

@@ -22,9 +22,8 @@ import jax.numpy as jnp
 
 from repro import configs as C
 from repro.configs.base import TrainConfig
-from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk_lib
-from repro.core.safeguard import SafeguardConfig
+from repro.core import defenses as dfn_lib
 from repro.data import pipeline as data_lib
 from repro.models import transformer as T
 from repro.optim import make_optimizer
@@ -32,19 +31,19 @@ from repro.train import Trainer, init_train_state, make_train_step
 from repro import checkpoint as ckpt_lib
 
 
-def build_defense(name: str, m: int, n_byz: int, args):
-    if name in ("safeguard", "safeguard_single"):
-        sg_cfg = SafeguardConfig(
-            m=m, T0=args.t0, T1=args.t1,
-            mode="single" if name.endswith("single") else "double",
-            threshold_floor=args.floor, reset_period=args.reset_period,
-            use_sketch=args.sketch)
-        return sg_cfg, None
-    reg = agg_lib.make_registry(n_byz, m)
+def build_defense(name: str, m: int, n_byz: int, args) -> dfn_lib.Defense:
+    """Any defense of the protocol registry (DESIGN.md §12);
+    ``safeguard`` is an alias for ``safeguard_double``."""
+    if name == "safeguard":
+        name = "safeguard_double"
+    reg = dfn_lib.make_registry(m, n_byz, T0=args.t0, T1=args.t1,
+                                threshold_floor=args.floor,
+                                reset_period=args.reset_period,
+                                use_sketch=args.sketch)
     if name not in reg:
         raise SystemExit(f"unknown defense {name}; "
-                         f"choose safeguard|safeguard_single|{sorted(reg)}")
-    return None, reg[name]
+                         f"choose safeguard|{sorted(reg)}")
+    return reg[name]
 
 
 def main():
@@ -82,16 +81,16 @@ def main():
 
     attacks = atk_lib.make_registry()
     attack = attacks[args.attack]
-    sg_cfg, aggregator = build_defense(args.defense, m, n_byz, args)
+    defense = build_defense(args.defense, m, n_byz, args)
 
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
     opt = make_optimizer(TrainConfig(lr=args.lr, momentum=args.momentum,
                                      optimizer=args.optimizer))
     loss = lambda p, b: T.loss_fn(p, cfg, b)
-    state = init_train_state(params, opt, sg_cfg=sg_cfg, attack=attack,
+    state = init_train_state(params, opt, defense=defense, attack=attack,
                              seed=args.seed)
-    step = make_train_step(loss, opt, byz_mask=byz_mask, sg_cfg=sg_cfg,
-                           aggregator=aggregator, attack=attack)
+    step = make_train_step(loss, opt, byz_mask=byz_mask, defense=defense,
+                           attack=attack)
 
     flip = byz_mask if attack.data_attack else None
     if cfg.embed_stub:
@@ -102,7 +101,7 @@ def main():
         it = data_lib.lm_batches(cfg.vocab_size, args.batch, args.seq,
                                  seed=args.seed, m=m, flip_mask=flip)
     held = None
-    if aggregator is not None and aggregator.needs_scores:
+    if defense.needs_held_batch:
         if cfg.embed_stub:
             held = data_lib.stub_batches(cfg.d_model, cfg.vocab_size,
                                          8, args.seq, seed=args.seed + 1)

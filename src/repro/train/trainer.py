@@ -13,12 +13,15 @@ master/worker protocol in SPMD form:
      previous step (good mask, thresholds, median distances — DESIGN.md
      §11), threaded through ``TrainState.attack_state`` so the feedback
      loop survives ``scan_trial``/vmap;
-  3. aggregation — SafeguardSGD (stateful, the paper's contribution) or a
-     historyless baseline aggregator (coord-median, Krum, Zeno, ...).
-     The safeguard's flat accumulator buffers (DESIGN.md §6) keep their
-     worker rows pinned to the ``data`` mesh axes via ``sg_acc_sharding``,
-     so the windowed accumulate stays shard-local and only the ``(m, m)``
-     distance matrix crosses shards;
+  3. aggregation — ONE ``core.defenses.Defense`` object (DESIGN.md §12):
+     SafeguardSGD, a historyless baseline, or a history-aware zoo
+     defense (centered clipping, norm filter, DnC, compositions).  Its
+     state — the safeguard's flat ``(m, d_pad)`` accumulators, momentum
+     buffers, EMA scalars — is threaded through
+     ``TrainState.defense_state``; flat buffers keep their worker rows
+     pinned to the ``data`` mesh axes via ``acc_sharding``, so windowed
+     accumulates stay shard-local and only the ``(m, m)`` distance
+     matrix crosses shards;
   4. the optimizer update.
 
 ``Trainer`` wraps the step with a plain python loop, metric collection and
@@ -40,6 +43,7 @@ import jax.numpy as jnp
 
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk_lib
+from repro.core import defenses as dfn_lib
 from repro.core import safeguard as sg
 from repro.core import tree_utils as tu
 from repro.optim import OptimizerBundle
@@ -52,22 +56,53 @@ f32 = jnp.float32
 class TrainState:
     params: Any
     opt_state: Any
-    sg_state: Optional[sg.SafeguardState]
+    defense_state: Any
     attack_state: Any
     step: jax.Array
     rng: jax.Array
 
+    @property
+    def sg_state(self):
+        """Back-compat alias from the pre-protocol era, when the
+        safeguard was the only stateful defense."""
+        return self.defense_state
+
+
+def resolve_defense(defense: Optional[dfn_lib.Defense] = None,
+                    sg_cfg: Optional[sg.SafeguardConfig] = None,
+                    aggregator: Optional[agg_lib.Aggregator] = None
+                    ) -> dfn_lib.Defense:
+    """One :class:`core.defenses.Defense` from the new (``defense=``) or
+    legacy (``sg_cfg=`` / ``aggregator=``) spellings."""
+    if defense is not None:
+        if sg_cfg is not None or aggregator is not None:
+            raise ValueError("pass either defense or sg_cfg/aggregator, "
+                             "not both")
+        return defense
+    if (sg_cfg is None) == (aggregator is None):
+        raise ValueError("pass exactly one of sg_cfg / aggregator")
+    if sg_cfg is not None:
+        return dfn_lib.make_safeguard_defense(sg_cfg)
+    return dfn_lib.from_aggregator(aggregator)
+
 
 def init_train_state(params, opt: OptimizerBundle, *,
+                     defense: Optional[dfn_lib.Defense] = None,
                      sg_cfg: Optional[sg.SafeguardConfig] = None,
+                     aggregator: Optional[agg_lib.Aggregator] = None,
                      attack: Optional[atk_lib.Attack] = None,
                      seed: int = 0) -> TrainState:
-    sg_state = sg.init_state(sg_cfg, params) if sg_cfg is not None else None
+    defense_state = None
+    if defense is not None or sg_cfg is not None:
+        d = resolve_defense(defense, sg_cfg, aggregator)
+        if d.init_state is not None:
+            defense_state = d.init_state(params)
     attack_state = (attack.init(params)
                     if attack is not None and attack.init is not None
                     else None)
     return TrainState(params=params, opt_state=opt.init(params),
-                      sg_state=sg_state, attack_state=attack_state,
+                      defense_state=defense_state,
+                      attack_state=attack_state,
                       step=jnp.zeros((), jnp.int32),
                       rng=jax.random.PRNGKey(seed))
 
@@ -94,16 +129,19 @@ def zeno_scores(loss_fn, params, grads, held_batch, *, eta: float,
 
 def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
                     byz_mask: jax.Array,
+                    defense: Optional[dfn_lib.Defense] = None,
                     sg_cfg: Optional[sg.SafeguardConfig] = None,
                     aggregator: Optional[agg_lib.Aggregator] = None,
                     attack: Optional[atk_lib.Attack] = None,
                     zeno_eta: float = 0.1, zeno_rho: float = 5e-4,
-                    spmd_axis_name=None, sg_acc_sharding=None,
-                    jit: bool = True):
+                    spmd_axis_name=None, acc_sharding=None,
+                    sg_acc_sharding=None, jit: bool = True):
     """Build the jitted training step.
 
-    Exactly one of ``sg_cfg`` (the paper's defense) or ``aggregator`` (a
-    baseline) must be given.  ``loss_fn(params, worker_batch) -> scalar``.
+    The defense is one :class:`core.defenses.Defense` (``defense=``);
+    the legacy spellings ``sg_cfg=`` (the paper's safeguard) and
+    ``aggregator=`` (a historyless baseline) are resolved through the
+    same protocol.  ``loss_fn(params, worker_batch) -> scalar``.
 
     ``spmd_axis_name``: mesh axis (or tuple) carrying the worker dimension
     at scale — passed to ``vmap`` so every per-worker intermediate keeps
@@ -111,13 +149,16 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
     propagation drops the worker sharding inside the layer scan and
     replicates multi-GiB attention buffers).
 
-    ``sg_acc_sharding``: optional ``NamedSharding`` for the safeguard's
-    flat accumulator buffers (see ``launch.sharding.flat_acc_pspec``);
-    ``None`` on a single device.
+    ``acc_sharding``: optional ``NamedSharding`` for the defense's flat
+    ``(m, d_pad)`` state buffers (see ``launch.sharding.flat_acc_pspec``);
+    ``None`` on a single device.  ``sg_acc_sharding`` is the deprecated
+    alias.
     """
-    if (sg_cfg is None) == (aggregator is None):
-        raise ValueError("pass exactly one of sg_cfg / aggregator")
+    defense = resolve_defense(defense, sg_cfg, aggregator)
+    if acc_sharding is None:
+        acc_sharding = sg_acc_sharding
     attack = attack or atk_lib.Attack("none", atk_lib.attack_none)
+    m = int(byz_mask.shape[0])
 
     def step_fn(state: TrainState, batch, held_batch=None):
         rng, k_attack, k_noise = jax.random.split(state.rng, 3)
@@ -132,33 +173,28 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
         grads, attack_state = attack.act(grads, byz_mask, state.attack_state,
                                          state.step, k_attack)
 
-        # (3) aggregation
+        # (3) aggregation through the Defense protocol (DESIGN.md §12)
         metrics: Dict[str, jax.Array] = {
             "loss": losses.mean(),
             "honest_loss": (losses * (~byz_mask)).sum()
             / jnp.maximum((~byz_mask).sum(), 1),
         }
-        if sg_cfg is not None:
-            sg_state, agg, info = sg.safeguard_step(
-                state.sg_state, grads, sg_cfg,
-                k_noise if sg_cfg.nu > 0 else None,
-                acc_sharding=sg_acc_sharding)
+        ctx = {"rng": k_noise, "acc_sharding": acc_sharding}
+        if defense.needs_held_batch:
+            if held_batch is None:
+                raise ValueError(f"{defense.name} needs a held-out batch")
+            ctx["scores"] = zeno_scores(loss_fn, state.params, grads,
+                                        held_batch, eta=zeno_eta,
+                                        rho=zeno_rho)
+        agg, defense_state, info = defense.aggregate(state.defense_state,
+                                                     grads, ctx)
+        if defense.stateful:
             metrics["n_good"] = info["n_good"]
             metrics["caught_byz"] = (byz_mask & ~info["good"]).sum()
             metrics["evicted_honest"] = (~byz_mask & ~info["good"]).sum()
-            metrics["restored"] = info["restored"].sum()
-            feedback = atk_lib.feedback_from_info(info)
-        else:
-            sg_state = state.sg_state
-            if aggregator.needs_scores:
-                if held_batch is None:
-                    raise ValueError("Zeno needs a held-out batch")
-                scores = zeno_scores(loss_fn, state.params, grads,
-                                     held_batch, eta=zeno_eta, rho=zeno_rho)
-                agg = aggregator.fn(grads, scores=scores)
-            else:
-                agg = aggregator.fn(grads)
-            feedback = atk_lib.null_feedback(byz_mask.shape[0])
+            if "restored" in info:
+                metrics["restored"] = info["restored"].sum()
+        feedback = atk_lib.defense_feedback(info, m)
 
         # feedback coupling (DESIGN.md §11): adaptive attacks fold this
         # step's public defense outputs into the state the next step's
@@ -171,7 +207,8 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
                                        state.step)
         metrics["grad_norm"] = jnp.sqrt(tu.tree_sq_norm(agg))
         new_state = TrainState(params=params, opt_state=opt_state,
-                               sg_state=sg_state, attack_state=attack_state,
+                               defense_state=defense_state,
+                               attack_state=attack_state,
                                step=state.step + 1, rng=rng)
         return new_state, metrics
 
@@ -184,7 +221,7 @@ def scan_trial(step_fn, state: TrainState, *, batch_fn, steps: int,
 
     ``step_fn`` must be the *unjitted* step (``make_train_step(...,
     jit=False)``) — its carry (:class:`TrainState`) already threads the
-    optimizer, safeguard and attack state pytrees, which is exactly what
+    optimizer, defense and attack state pytrees, which is exactly what
     makes the loop body scan-able (and, one level up, vmap-able over
     seeds/scenario knobs).
 

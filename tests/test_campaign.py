@@ -46,6 +46,38 @@ def test_scenario_id_excludes_default_valued_fields():
     assert scenario_id(s) == expect
 
 
+def test_scenario_id_folds_variance_calibration():
+    """The variance attack's collusion strength is part of every variance
+    cell's store key: recalibrating attacks.VARIANCE_Z orphans exactly
+    the stale variance rows instead of silently mixing strengths in a
+    resumed store.  Non-variance keys are untouched."""
+    import hashlib
+    from repro.core.attacks import VARIANCE_Z
+    v = Scenario(attack="variance", defense="mean")
+    want = hashlib.sha256(json.dumps(
+        {"_variance_z": VARIANCE_Z, "attack": "variance",
+         "defense": "mean"}, sort_keys=True).encode()).hexdigest()[:16]
+    assert scenario_id(v) == want
+    s = Scenario(attack="sign_flip", defense="mean")
+    want = hashlib.sha256(json.dumps(
+        {"attack": "sign_flip", "defense": "mean"},
+        sort_keys=True).encode()).hexdigest()[:16]
+    assert scenario_id(s) == want
+
+
+def test_spectral_iters_over_cap_fails_loudly():
+    """A spectral_iters above the static scan length would silently
+    truncate (lanes above the cap would be bit-identical to the cap) —
+    both the engine and the factory reject it."""
+    from repro.core import defenses as dfn
+    scns = [Scenario(attack="variance", defense="dnc",
+                     spectral_iters=dfn.MAX_SPECTRAL_ITERS + 1)]
+    with pytest.raises(ValueError, match="truncate"):
+        engine.stack_knobs(scns)
+    with pytest.raises(ValueError, match="truncate"):
+        dfn.make_dnc(10, 4, iters=dfn.MAX_SPECTRAL_ITERS + 1)
+
+
 def test_expand_grid_and_seeds():
     grid = expand_grid(attack=["a1", "a2"], defense=["d1", "d2", "d3"])
     assert len(grid) == 6
@@ -86,10 +118,17 @@ STEPS = 30
 
 def test_engine_matches_trainer_path():
     """Acceptance: vmapped engine trajectories == the per-trial Trainer
-    path, numerically identical (same rng streams, same op order)."""
+    path, numerically identical (same rng streams, same op order) — for
+    EVERY ported defense of the protocol registry (all seven historyless
+    aggregators, both safeguard variants, the stateful zoo)."""
     task = tasks.make_teacher_task()
     for attack, defense in [("sign_flip", "safeguard_double"),
+                            ("variance", "safeguard_single"),
                             ("variance", "coord_median"),
+                            ("sign_flip", "mean"),
+                            ("variance", "trimmed_mean"),
+                            ("sign_flip", "geo_median"),
+                            ("variance", "weiszfeld"),
                             ("label_flip", "krum"),
                             ("sign_flip", "zeno"),
                             # adaptive: registry and Scenario share the
@@ -107,6 +146,31 @@ def test_engine_matches_trainer_path():
             (attack, defense)
         if "caught_byz" in loop:
             assert eng["caught_byz"] == loop["caught_byz"]
+            assert eng["evicted_honest"] == loop["evicted_honest"]
+
+
+def test_engine_matches_trainer_path_zoo():
+    """The stateful zoo (DESIGN.md §12): registry and Scenario share the
+    DEFENSE_DEFAULTS single source, so the two paths build identical
+    defenses.  Equality is exact for three of the four; the
+    safeguard+clip COMPOSITION is exact only up to ulp-level XLA fusion
+    (the composed graph fuses differently inside ``lax.scan`` than as a
+    standalone jitted step — filter decisions still match exactly;
+    vmapped-vs-unbatched engine lanes stay bit-exact,
+    ``test_stateful_zoo_defenses_vmap_bitexact``)."""
+    task = tasks.make_teacher_task()
+    for attack, defense, tol in [("variance", "centered_clip", 1e-12),
+                                 ("sign_flip", "norm_filter", 1e-12),
+                                 ("variance", "dnc", 1e-12),
+                                 ("variance", "safeguard_cclip", 2e-3)]:
+        scn = common.scenario_for(attack, defense, steps=STEPS, task=task)
+        eng = engine.run_scenarios([scn])[scenario_id(scn)]
+        loop = common.run_experiment_loop(task, attack, defense,
+                                          steps=STEPS)
+        assert eng["acc"] == pytest.approx(loop["acc"], abs=tol), \
+            (attack, defense)
+        if "caught_byz" in loop:
+            assert eng["caught_byz"] == loop["caught_byz"], (attack, defense)
             assert eng["evicted_honest"] == loop["evicted_honest"]
 
 
@@ -148,6 +212,72 @@ def test_adaptive_attacks_vmap_bitexact():
                     (attack, s.seed, key)
             assert np.array_equal(b["final_good"], u["final_good"])
             assert b["acc"] == u["acc"]
+
+
+def test_stateful_zoo_defenses_vmap_bitexact():
+    """Tentpole acceptance: the zoo defenses' state pytrees (momentum
+    buffers, EMA scalars, warm-started spectral directions, composed
+    safeguard accumulators) batch correctly over the seed axis —
+    vmapped lanes match the unbatched trajectory bit-for-bit."""
+    for defense in ("centered_clip", "norm_filter", "dnc",
+                    "safeguard_cclip"):
+        scns = [Scenario(attack="variance", defense=defense, steps=STEPS,
+                         seed=k) for k in range(2)]
+        assert len(engine.group_scenarios(scns)) == 1
+        batched = engine.run_scenarios(scns, batched=True)
+        unbatched = engine.run_scenarios(scns, batched=False)
+        for s in scns:
+            b, u = batched[scenario_id(s)], unbatched[scenario_id(s)]
+            for key in b["traces"]:
+                assert np.array_equal(b["traces"][key], u["traces"][key]), \
+                    (defense, s.seed, key)
+            assert b["acc"] == u["acc"], defense
+
+
+def test_defense_knobs_are_vmap_axes():
+    """clip_tau/clip_beta/spectral_iters only feed arithmetic inside
+    Defense.aggregate, so all variants run as lanes of one program — and
+    the traced knob changes the outcome."""
+    scns = [Scenario(attack="variance", defense="centered_clip",
+                     steps=STEPS, clip_tau=t, clip_beta=b)
+            for t, b in ((0.5, 0.9), (3.0, 0.5))]
+    assert len(engine.group_scenarios(scns)) == 1
+    res = engine.run_scenarios(scns)
+    a, b = (res[scenario_id(s)] for s in scns)
+    assert not np.array_equal(a["traces"]["loss"], b["traces"]["loss"])
+
+    scns = [Scenario(attack="variance", defense="dnc", steps=STEPS,
+                     spectral_iters=i, n_byz=nb)
+            for i, nb in ((1, 4), (8, 2))]
+    assert len(engine.group_scenarios(scns)) == 1   # n_byz dynamic for dnc
+    res = engine.run_scenarios(scns)
+    a, b = (res[scenario_id(s)] for s in scns)
+    assert not np.array_equal(a["traces"]["loss"], b["traces"]["loss"])
+    assert a["caught_byz"] == 4 and b["caught_byz"] == 2
+
+
+def test_centered_clip_survives_variance_attack_mean_does_not():
+    """Acceptance: in the Table-1 grid protocol (150 steps, m=10,
+    alpha=0.4), the variance attack measurably degrades the undefended
+    mean while centered clipping — history via worker momentum and the
+    carried center, nobody evicted — stays at the safeguard's level."""
+    seeds = range(2)
+    cells = {d: [Scenario(attack="variance", defense=d, steps=150, seed=k)
+                 for k in seeds]
+             for d in ("centered_clip", "mean", "safeguard_double")}
+    res = engine.run_scenarios([s for scns in cells.values() for s in scns])
+
+    def acc(d):
+        return float(np.mean([res[scenario_id(s)]["acc"]
+                              for s in cells[d]]))
+
+    acc_cc, acc_mean, acc_sg = (acc(d) for d in
+                                ("centered_clip", "mean",
+                                 "safeguard_double"))
+    assert acc_cc > acc_mean + 0.025          # mean degrades, cclip holds
+    assert acc_cc >= acc_sg - 0.04            # at the safeguard's level
+    for s in cells["centered_clip"]:          # bounded influence, no
+        assert "caught_byz" not in res[scenario_id(s)]   # eviction at all
 
 
 def test_adaptive_knobs_are_vmap_axes():

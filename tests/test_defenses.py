@@ -1,0 +1,337 @@
+"""The unified Defense protocol (DESIGN.md §12): registry contract,
+bit-identical ports of the legacy aggregators and the safeguard, the
+history-aware zoo (centered clipping, norm filter, DnC, composition),
+the Weiszfeld numerics fixes, and the single-source trim derivation."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SafeguardConfig
+from repro.core import aggregators as agg_lib
+from repro.core import attacks as atk_lib
+from repro.core import defenses as dfn
+from repro.core import safeguard as sg
+
+M, NBYZ = 10, 4
+BYZ = np.arange(M) < NBYZ
+
+
+@pytest.fixture
+def grads(rng):
+    k1, k2 = jax.random.split(rng)
+    return {"a": jax.random.normal(k1, (M, 7, 4)),
+            "b": jax.random.normal(k2, (M, 7))}
+
+
+def params_like(grads):
+    return jax.tree.map(lambda l: l[0], grads)
+
+
+def run_defense(d: dfn.Defense, grads, ctx=None, state="init"):
+    if state == "init":
+        state = d.init_state(params_like(grads)) if d.init_state else None
+    return d.aggregate(state, grads, ctx or {})
+
+
+# -------------------------------------------------------------- protocol
+
+
+def test_registry_contract(grads):
+    """Every registry defense aggregates to a finite parameter pytree and
+    publishes the mandatory good/n_good info keys."""
+    reg = dfn.make_registry(M, NBYZ)
+    assert set(reg) >= {"mean", "coord_median", "trimmed_mean",
+                        "geo_median", "weiszfeld", "krum", "zeno",
+                        "safeguard_single", "safeguard_double",
+                        "centered_clip", "norm_filter", "dnc",
+                        "safeguard_cclip"}
+    for name, d in reg.items():
+        ctx = ({"scores": jnp.arange(M, dtype=jnp.float32)}
+               if d.needs_held_batch else {})
+        agg, state, info = run_defense(d, grads, ctx)
+        assert agg["a"].shape == (7, 4), name
+        assert bool(jnp.isfinite(agg["a"]).all()), name
+        assert info["good"].shape == (M,) and info["good"].dtype == bool, name
+        assert float(info["n_good"]) >= 1, name
+        assert (state is None) == (not d.stateful), name
+
+
+def test_stateless_ports_bit_identical(grads):
+    """The seven historyless aggregators under the protocol return the
+    exact bits of the pure functions they wrap."""
+    reg = dfn.make_registry(M, NBYZ)
+    trim = dfn.derive_trim(NBYZ, M)
+    scores = jnp.linspace(-1.0, 1.0, M)
+    pure = {
+        "mean": agg_lib.mean(grads),
+        "coord_median": agg_lib.coordinate_median(grads),
+        "trimmed_mean": agg_lib.trimmed_mean(grads, trim=trim),
+        "geo_median": agg_lib.geometric_medoid(grads),
+        "weiszfeld": agg_lib.geometric_median(grads),
+        "krum": agg_lib.krum(grads, n_byz=NBYZ),
+        "zeno": agg_lib.zeno(grads, scores, n_byz=NBYZ),
+    }
+    for name, want in pure.items():
+        got, _, _ = run_defense(reg[name], grads, {"scores": scores})
+        for g, w in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            assert np.array_equal(np.asarray(g), np.asarray(w)), name
+
+
+def test_safeguard_port_bit_identical(grads):
+    """The safeguard Defense is the plain safeguard_step: same aggregate,
+    same state, same info, step for step."""
+    cfg = SafeguardConfig(m=M, T0=4, T1=8, threshold_floor=0.5)
+    d = dfn.make_safeguard_defense(cfg)
+    st_d = d.init_state(params_like(grads))
+    st_s = sg.init_state(cfg, params_like(grads))
+    for t in range(6):
+        g = jax.tree.map(lambda l: l + 0.1 * t, grads)
+        agg_d, st_d, info_d = d.aggregate(st_d, g, {})
+        st_s, agg_s, info_s = sg.safeguard_step(st_s, g, cfg)
+        assert np.array_equal(np.asarray(st_d.good), np.asarray(st_s.good))
+        assert np.array_equal(np.asarray(st_d.B), np.asarray(st_s.B))
+        for a, b in zip(jax.tree_util.tree_leaves(agg_d),
+                        jax.tree_util.tree_leaves(agg_s)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.array_equal(np.asarray(info_d["dist_to_med_B"]),
+                              np.asarray(info_s["dist_to_med_B"]))
+
+
+def test_zeno_requires_scores(grads):
+    reg = dfn.make_registry(M, NBYZ)
+    with pytest.raises(ValueError, match="scores"):
+        run_defense(reg["zeno"], grads, {})
+
+
+def test_final_good_extraction(grads):
+    reg = dfn.make_registry(M, NBYZ)
+    assert dfn.final_good(None) is None
+    for name in ("mean", "centered_clip"):
+        _, state, _ = run_defense(reg[name], grads)
+        assert dfn.final_good(state) is None
+    for name in ("safeguard_double", "norm_filter", "dnc",
+                 "safeguard_cclip"):
+        _, state, _ = run_defense(reg[name], grads)
+        good = dfn.final_good(state)
+        assert good is not None and good.shape == (M,), name
+
+
+def test_trim_derivation_single_source():
+    """Satellite: the legacy aggregator registry and the Defense registry
+    share one trim/n_byz derivation (defenses.derive_trim)."""
+    for m, b in ((10, 4), (9, 7), (5, 1)):
+        want = dfn.derive_trim(b, m)
+        a = agg_lib.make_registry(b, m)["trimmed_mean"]
+        d = dfn.make_registry(m, b)["trimmed_mean"]
+        g = {"w": jnp.arange(m * 3, dtype=jnp.float32).reshape(m, 3)}
+        np.testing.assert_array_equal(
+            np.asarray(a.fn(g)["w"]),
+            np.asarray(agg_lib.trimmed_mean(g, trim=want)["w"]))
+        got, _, _ = d.aggregate(None, g, {})
+        np.testing.assert_array_equal(
+            np.asarray(got["w"]),
+            np.asarray(agg_lib.trimmed_mean(g, trim=want)["w"]))
+    assert dfn.static_nbyz_names() == {"trimmed_mean", "krum", "zeno"}
+
+
+# ------------------------------------------------------------- weiszfeld
+
+
+def test_weiszfeld_convergence_regression(rng):
+    """Satellite: Weiszfeld converges to the true geometric median (checked
+    against a long-run numpy fixed point) and keeps improving with more
+    iterations — the f32-carried iterate regression."""
+    arr = np.asarray(jax.random.normal(rng, (M, 6)), np.float64)
+    arr[:3] += 25.0                          # outlier cluster
+    y = arr.mean(0)
+    for _ in range(4096):                    # numpy oracle fixed point
+        d = np.sqrt(((arr - y[None]) ** 2).sum(1) + 1e-8)
+        w = 1.0 / d
+        y = (w[:, None] * arr).sum(0) / w.sum()
+
+    g = {"w": jnp.asarray(arr, jnp.float32)}
+    got8 = np.asarray(agg_lib.geometric_median(g, iters=8)["w"])
+    got64 = np.asarray(agg_lib.geometric_median(g, iters=64)["w"])
+    assert np.linalg.norm(got64 - y) < 1e-2
+    assert np.linalg.norm(got64 - y) <= np.linalg.norm(got8 - y) + 1e-5
+
+
+def test_weiszfeld_f32_iterate_under_low_precision(rng):
+    """bf16 gradients: the iterate must be carried in f32 (a per-step
+    bf16 round trip stalls at the quantization grid)."""
+    arr = jax.random.normal(rng, (M, 16))
+    g16 = {"w": arr.astype(jnp.bfloat16)}
+    got = agg_lib.geometric_median(g16, iters=32)
+    assert got["w"].dtype == jnp.bfloat16       # interface dtype preserved
+    want = agg_lib.geometric_median(
+        {"w": arr.astype(jnp.bfloat16).astype(jnp.float32)}, iters=32)
+    # identical up to the single final cast — NOT 32 accumulated casts
+    np.testing.assert_allclose(
+        np.asarray(got["w"], np.float32), np.asarray(want["w"]),
+        atol=float(jnp.finfo(jnp.bfloat16).eps) * 4)
+
+
+def test_weiszfeld_degenerate_weights_no_nan():
+    """w.sum() == 0 guard: inputs whose pairwise distances overflow f32
+    (every weight underflows to 0) must not return NaN."""
+    g = {"w": jnp.full((6, 8), 1e25, jnp.float32)
+         * (1.0 + jnp.arange(6, dtype=jnp.float32))[:, None]}
+    out = agg_lib.geometric_median(g, iters=8)
+    assert bool(jnp.isfinite(out["w"]).all())
+
+
+# ----------------------------------------------------------------- zoo
+
+
+def _byz_variance_stack(key, m=M, n_byz=NBYZ, d=64, z=1.5):
+    """Honest rows ~ N(mu, I); byzantine rows collude on mu - z*sigma."""
+    byz = jnp.arange(m) < n_byz
+    g = {"w": 2.0 + jax.random.normal(key, (m, d))}
+    out, _ = atk_lib.make_variance_attack(z)(g, byz, None, jnp.int32(0),
+                                             key)
+    return out, byz
+
+
+def test_centered_clip_bounds_byzantine_influence(rng):
+    """A colluding row at huge magnitude moves the aggregate by at most
+    the clip radius — the bounded-influence property mean lacks."""
+    d = dfn.make_centered_clip(M, tau=1.0, beta=0.0)
+    g = {"w": jax.random.normal(rng, (M, 32))}
+    g_adv = {"w": g["w"].at[:NBYZ].set(1e4)}
+    state = d.init_state(params_like(g))
+    agg_clean, _, _ = d.aggregate(state, g, {})
+    agg_adv, _, _ = d.aggregate(state, g_adv, {})
+    honest_scale = float(jnp.linalg.norm(g["w"][NBYZ:].mean(0)))
+    shift = float(jnp.linalg.norm(agg_adv["w"] - agg_clean["w"]))
+    assert shift < 10.0 * honest_scale + 10.0      # nothing like 1e4
+    assert bool(jnp.isfinite(agg_adv["w"]).all())
+
+
+def test_centered_clip_momentum_is_history(rng):
+    """The momentum buffer carries history: the same gradients through a
+    fresh state and a warmed state aggregate differently."""
+    d = dfn.make_centered_clip(M, beta=0.9)
+    g = {"w": jax.random.normal(rng, (M, 16))}
+    fresh = d.init_state(params_like(g))
+    _, warmed, _ = d.aggregate(fresh, g, {})
+    a1, _, _ = d.aggregate(fresh, {"w": -g["w"]}, {})
+    a2, _, _ = d.aggregate(warmed, {"w": -g["w"]}, {})
+    assert not np.allclose(np.asarray(a1["w"]), np.asarray(a2["w"]))
+
+
+def test_norm_filter_rejects_spike_against_ema(rng):
+    """A norm spike in step 2 is rejected against the EMA of step 1's
+    honest scale — the history the defense carries."""
+    d = dfn.make_norm_filter(M, mult=2.0, ema_beta=0.9)
+    g = {"w": jax.random.normal(rng, (M, 32))}
+    state = d.init_state(params_like(g))
+    _, state, info1 = d.aggregate(state, g, {})
+    assert bool(info1["good"].all())               # calibration step
+    spike = {"w": g["w"].at[:NBYZ].mul(50.0)}
+    agg, state, info2 = d.aggregate(state, spike, {})
+    assert not bool(info2["good"][:NBYZ].any())    # spikes rejected
+    assert bool(info2["good"][NBYZ:].all())        # honest kept
+    assert np.array_equal(np.asarray(dfn.final_good(state)),
+                          np.asarray(info2["good"]))
+
+
+def test_dnc_finds_variance_colluders(rng):
+    """The variance attack is invisible per coordinate but IS the top
+    singular direction of the centered stack — DnC removes exactly the
+    colluders."""
+    d = dfn.make_dnc(M, NBYZ, iters=8)
+    g, byz = _byz_variance_stack(rng)
+    state = d.init_state(params_like(g))
+    # two steps: the warm-started direction sharpens the second decision
+    _, state, _ = d.aggregate(state, g, {})
+    g2, _ = _byz_variance_stack(jax.random.fold_in(rng, 1))
+    _, state, info = d.aggregate(state, g2, {})
+    assert not bool(info["good"][:NBYZ].any())     # colluders dropped
+    assert bool(info["good"][NBYZ:].all())
+
+
+def test_dnc_nbyz_zero_keeps_everyone(rng):
+    d = dfn.make_dnc(M, 0, iters=4)
+    g = {"w": jax.random.normal(rng, (M, 16))}
+    _, _, info = run_defense(d, g)
+    assert bool(info["good"].all())
+
+
+def test_safeguard_cclip_filters_like_safeguard(rng):
+    """The composition's good-set trajectory is the safeguard's own
+    (same windows/thresholds), while the aggregate is the clipped
+    center, not the masked mean."""
+    cfg = SafeguardConfig(m=M, T0=4, T1=8, threshold_floor=0.1)
+    comp = dfn.make_safeguard_cclip(cfg)
+    plain = dfn.make_safeguard_defense(cfg)
+    key = rng
+    st_c = comp.init_state({"w": jnp.zeros((12,))})
+    st_p = plain.init_state({"w": jnp.zeros((12,))})
+    for t in range(10):
+        key, k = jax.random.split(key)
+        g = {"w": 1.0 + 0.05 * jax.random.normal(k, (M, 12))}
+        g["w"] = g["w"].at[:NBYZ].multiply(-1.0)   # sign flip colluders
+        agg_c, st_c, info_c = comp.aggregate(st_c, g, {})
+        agg_p, st_p, info_p = plain.aggregate(st_p, g, {})
+        assert np.array_equal(np.asarray(info_c["good"]),
+                              np.asarray(info_p["good"]))
+    assert not bool(dfn.final_good(st_c)[:NBYZ].any())   # flippers evicted
+    assert bool(dfn.final_good(st_c)[NBYZ:].all())
+    assert not np.allclose(np.asarray(agg_c["w"]), np.asarray(agg_p["w"]))
+
+
+def test_safeguard_cclip_requires_flat_engine():
+    with pytest.raises(ValueError, match="flat"):
+        dfn.make_safeguard_cclip(
+            SafeguardConfig(m=M, engine="stacked"))
+
+
+def test_flat_state_defenses_scan_and_vmap(rng):
+    """Zoo states are plain fixed-shape pytrees: a 3-step lax.scan over a
+    vmapped (2-lane) aggregate runs and stays finite — the property the
+    campaign engine relies on."""
+    reg = dfn.make_registry(M, NBYZ)
+    for name in ("centered_clip", "norm_filter", "dnc", "safeguard_cclip"):
+        d = reg[name]
+        g = {"w": jax.random.normal(rng, (2, M, 24))}    # 2 lanes
+        state0 = jax.vmap(lambda _: d.init_state({"w": jnp.zeros((24,))})
+                          )(jnp.arange(2))
+
+        def body(state, t):
+            agg, state, info = jax.vmap(
+                lambda s, gl: d.aggregate(s, {"w": gl + 0.1 * t}, {})
+            )(state, g["w"])
+            return state, agg["w"]
+
+        _, stacked = jax.lax.scan(body, state0, jnp.arange(3))
+        assert stacked.shape == (3, 2, 24), name
+        assert bool(jnp.isfinite(stacked).all()), name
+
+
+def test_defense_feedback_projection(grads):
+    """Filtering zoo defenses surface their evictions to adaptive
+    attacks; pure aggregation reduces to null feedback exactly."""
+    reg = dfn.make_registry(M, NBYZ)
+    _, _, info_mean = run_defense(reg["mean"], grads)
+    fb = atk_lib.defense_feedback(info_mean, M)
+    null = atk_lib.null_feedback(M)
+    for k in null:
+        assert np.array_equal(np.asarray(fb[k]), np.asarray(null[k])), k
+
+    d = dfn.make_norm_filter(M)
+    state = d.init_state(params_like(grads))
+    _, state, _ = d.aggregate(state, grads, {})
+    spike = jax.tree.map(lambda l: l.at[:NBYZ].mul(50.0), grads)
+    _, _, info = d.aggregate(state, spike, {})
+    fb = atk_lib.defense_feedback(info, M)
+    assert not bool(fb["good"][:NBYZ].any())
+    assert float(fb["n_good"]) == M - NBYZ
+    _, _, info_sg = run_defense(reg["safeguard_double"], grads)
+    fb_sg = atk_lib.defense_feedback(info_sg, M)
+    assert float(fb_sg["threshold_B"] if "threshold_B" in fb_sg else
+                 fb_sg["threshold"]) < atk_lib.OPEN_LOOP_THRESHOLD
