@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast bench-quick bench-overhead campaign-smoke \
-	adaptive-smoke defense-smoke lint dryrun-smoke
+	adaptive-smoke defense-smoke hetero-smoke lint dryrun-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -34,6 +34,13 @@ adaptive-smoke:
 defense-smoke:
 	$(PY) -m repro.campaign.run --campaign defense --quick --seeds 2
 	$(PY) -m repro.campaign.run --campaign defense --quick --seeds 2 \
+	    | grep -q "new_cells=0"
+
+# the CI heterogeneity step (DESIGN.md §13): non-IID worker models x
+# defenses (incl. bucketing), then assert the store resumes with 0 new cells
+hetero-smoke:
+	$(PY) -m repro.campaign.run --campaign hetero --quick --seeds 1
+	$(PY) -m repro.campaign.run --campaign hetero --quick --seeds 1 \
 	    | grep -q "new_cells=0"
 
 lint:

@@ -29,6 +29,7 @@ from repro.configs.base import TrainConfig
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk_lib
 from repro.core import defenses as dfn_lib
+from repro.data import hetero as het_lib
 from repro.data import tasks
 from repro.optim import make_optimizer
 from repro.train import Trainer, init_train_state, make_train_step
@@ -41,18 +42,24 @@ ATTACKS = list(TABLE1_ATTACKS)
 DEFENSES = list(TABLE1_DEFENSES)
 
 
-def make_defense(name: str, *, t0=20, t1=120, floor=0.1, reset_period=0
+def make_defense(name: str, *, t0=20, t1=120, floor=0.1, reset_period=0,
+                 scale=dfn_lib.DEFENSE_DEFAULTS["threshold_scale"],
+                 bucket_s: int = dfn_lib.DEFENSE_DEFAULTS["bucket_s"]
                  ) -> dfn_lib.Defense:
     """The benchmark protocol's defense instances (unified registry,
     DESIGN.md §12)."""
     return dfn_lib.make_registry(M, N_BYZ, T0=t0, T1=t1,
                                  threshold_floor=floor,
-                                 reset_period=reset_period)[name]
+                                 threshold_scale=scale,
+                                 reset_period=reset_period,
+                                 bucket_s=bucket_s)[name]
 
 
 def scenario_for(attack_name: str, defense_name: str, *, steps: int = 150,
                  lr: float = 0.1, batch: int = 100, seed: int = 0,
-                 reset_period: int = 0,
+                 reset_period: int = 0, hetero: str = "iid",
+                 hetero_alpha: float = 0.0, hetero_shift: float = 0.0,
+                 bucket_s: int = dfn_lib.DEFENSE_DEFAULTS["bucket_s"],
                  task: Optional[tasks.TeacherTask] = None) -> Scenario:
     """The campaign-engine Scenario equivalent of ``run_experiment``'s
     arguments (same task shape, windows, thresholds, rng scheme)."""
@@ -62,12 +69,15 @@ def scenario_for(attack_name: str, defense_name: str, *, steps: int = 150,
                   n_classes=task.n_classes, task_seed=task.seed)
     return Scenario(attack=attack_name, defense=defense_name, m=M,
                     n_byz=N_BYZ, steps=steps, seed=seed, lr=lr, batch=batch,
-                    reset_period=reset_period, **kw)
+                    reset_period=reset_period, hetero=hetero,
+                    hetero_alpha=hetero_alpha, hetero_shift=hetero_shift,
+                    bucket_s=bucket_s, **kw)
 
 
 def run_experiment(task, attack_name: str, defense_name: str, *,
                    steps: int = 150, lr: float = 0.1, batch: int = 100,
-                   seed: int = 0, reset_period: int = 0,
+                   seed: int = 0, reset_period: int = 0, hetero: str = "iid",
+                   hetero_alpha: float = 0.0, hetero_shift: float = 0.0,
                    collect=None) -> Dict:
     """One grid cell.  Engine path (scan-rolled trial) unless a
     ``collect`` callback needs per-step python visibility."""
@@ -75,10 +85,13 @@ def run_experiment(task, attack_name: str, defense_name: str, *,
         return run_experiment_loop(task, attack_name, defense_name,
                                    steps=steps, lr=lr, batch=batch,
                                    seed=seed, reset_period=reset_period,
+                                   hetero=hetero, hetero_alpha=hetero_alpha,
+                                   hetero_shift=hetero_shift,
                                    collect=collect)
     scn = scenario_for(attack_name, defense_name, steps=steps, lr=lr,
                        batch=batch, seed=seed, reset_period=reset_period,
-                       task=task)
+                       hetero=hetero, hetero_alpha=hetero_alpha,
+                       hetero_shift=hetero_shift, task=task)
     t0_wall = time.time()
     rec = campaign_engine.run_scenarios([scn])[scenario_id(scn)]
     out = {"attack": attack_name, "defense": defense_name,
@@ -93,6 +106,8 @@ def run_experiment(task, attack_name: str, defense_name: str, *,
 def run_experiment_loop(task, attack_name: str, defense_name: str, *,
                         steps: int = 150, lr: float = 0.1, batch: int = 100,
                         seed: int = 0, reset_period: int = 0,
+                        hetero: str = "iid", hetero_alpha: float = 0.0,
+                        hetero_shift: float = 0.0,
                         collect=None) -> Dict:
     """Legacy per-trial ``Trainer`` path: one jit, python-loop steps."""
     # steps is forwarded so the burst window derives from the trial length
@@ -107,7 +122,15 @@ def run_experiment_loop(task, attack_name: str, defense_name: str, *,
     step = make_train_step(tasks.mlp_loss, opt, byz_mask=BYZ,
                            defense=defense, attack=attack)
     flip = BYZ if attack.data_attack else None
-    it = tasks.teacher_batches(task, batch, seed=seed, m=M, flip_mask=flip)
+    if hetero != "iid":
+        # the hetero iterator shares the engine batch_fn's key schedule
+        # and selection (repro.data.hetero) — bit-identical paths
+        it = het_lib.hetero_batches(task, batch, mode=hetero,
+                                    alpha=hetero_alpha, shift=hetero_shift,
+                                    seed=seed, m=M, flip_mask=flip)
+    else:
+        it = tasks.teacher_batches(task, batch, seed=seed, m=M,
+                                   flip_mask=flip)
     held = (tasks.teacher_batches(task, 10, seed=seed + 7)
             if defense.needs_held_batch else None)
     tr = Trainer(state, step, it, held_iter=held, log_every=10 ** 9,

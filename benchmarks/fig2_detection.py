@@ -1,68 +1,38 @@
 """Paper Figure 2(a): the detection statistic ||B_i - B_med|| grows
 ~sqrt(t) for honest workers but ~linearly for a variance attacker.  We fit
-the growth exponent of both and report the ratio."""
+the growth exponent of both and report the ratio.
+
+The per-step, per-worker statistic comes straight out of the campaign
+engine's traces (``dist_to_med_B``, published by the safeguard through
+the Defense info and traced by the trainer — DESIGN.md §13's trace
+layer): one scan-rolled trial, no hand-rolled training loop.  Eviction
+is disabled by a huge threshold floor so the statistic stays observable
+for the whole run.
+"""
 
 from __future__ import annotations
 
 import json
 import os
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.data import tasks
+from repro.campaign import engine
+from repro.campaign.scenario import Scenario, scenario_id
 from benchmarks import common
 
 
 def run(steps: int = 200, out_dir: str = "experiments/bench"):
-    task = tasks.make_teacher_task()
-    traj = {"byz": [], "honest": []}
+    scn = Scenario(attack="variance", defense="safeguard_double",
+                   steps=steps, lr=0.05, m=common.M, n_byz=common.N_BYZ,
+                   # disable eviction (huge windows + floor) so the
+                   # statistic is observable all run
+                   T0=10 ** 6, T1=10 ** 6, threshold_floor=10 ** 6)
+    rec = engine.run_scenarios([scn])[scenario_id(scn)]
+    dist = np.asarray(rec["traces"]["dist_to_med_B"])      # (steps, m)
+    arr = np.stack([dist[:, :common.N_BYZ].mean(axis=1),
+                    dist[:, common.N_BYZ:].mean(axis=1)], axis=1)
 
-    def collect(i, state, metrics):
-        pass
-
-    # disable eviction (huge floor) so the statistic is observable all run
-    from repro.core import SafeguardConfig, init_state, safeguard_step
-    from repro.core import attacks as atk_lib
-    from repro.configs.base import TrainConfig
-    from repro.optim import make_optimizer
-    from repro.train import init_train_state, make_train_step
-    import jax
-
-    sg_cfg = SafeguardConfig(m=common.M, T0=10 ** 6, T1=10 ** 6,
-                             threshold_floor=10 ** 6)
-    attack = atk_lib.make_variance_attack(z_max=1.5)
-    opt = make_optimizer(TrainConfig(lr=0.05))
-    params = tasks.student_init(task)
-    state = init_train_state(params, opt, sg_cfg=sg_cfg)
-    loss = tasks.mlp_loss
-    step = make_train_step(
-        loss, opt, byz_mask=common.BYZ, sg_cfg=sg_cfg,
-        attack=atk_lib.Attack("variance", attack))
-    it = tasks.teacher_batches(task, 100, m=common.M)
-    import repro.core.safeguard as sg
-    # re-run manually to capture info
-    st = state
-    stats = []
-    for t in range(steps):
-        b = next(it)
-        # one manual step to capture dist_to_med
-        vg = jax.value_and_grad(loss)
-        _, grads = jax.vmap(lambda wb: vg(st.params, wb))(b)
-        grads, astate = attack(grads, common.BYZ, st.attack_state,
-                               st.step, jax.random.PRNGKey(t))
-        sg_state, agg, info = sg.safeguard_step(st.sg_state, grads, sg_cfg)
-        new_params, opt_state = opt.update(agg, st.opt_state, st.params,
-                                           st.step)
-        from repro.train.trainer import TrainState
-        st = TrainState(params=new_params, opt_state=opt_state,
-                        defense_state=sg_state, attack_state=astate,
-                        step=st.step + 1, rng=st.rng)
-        d = np.asarray(info["dist_to_med_B"])
-        stats.append((float(d[:common.N_BYZ].mean()),
-                      float(d[common.N_BYZ:].mean())))
-
-    arr = np.array(stats)  # (steps, 2): byz, honest
     ts = np.arange(10, steps)
     fit = {}
     for j, name in enumerate(("byz", "honest")):

@@ -24,10 +24,14 @@ import statistics
 from typing import Dict, List, Sequence, Tuple
 
 from repro.campaign import engine
-from repro.campaign.scenario import (ADAPTIVE_ATTACKS, ZOO_DEFENSES,
-                                     Scenario, scenario_id)
+from repro.campaign.scenario import (ADAPTIVE_ATTACKS, HETERO_DEFENSES,
+                                     ZOO_DEFENSES, Scenario, scenario_id)
 from repro.data import tasks
 from benchmarks import common
+
+# the non-IID block's skew: strong enough to separate selection-style
+# rules from bounded-influence ones (DESIGN.md §13)
+HETERO_ALPHA = 0.1
 
 
 def build_rows(scenarios: Sequence[Scenario],
@@ -54,11 +58,14 @@ def build_rows(scenarios: Sequence[Scenario],
 
 
 def run(steps: int = 150, out_dir: str = "experiments/bench",
-        seeds: int = 1, adaptive: bool = True, zoo: bool = True):
+        seeds: int = 1, adaptive: bool = True, zoo: bool = True,
+        hetero: bool = True):
     """``adaptive=True`` appends the feedback-coupled adversary rows
     (DESIGN.md §11) below the paper's static grid; ``zoo=True`` appends
     the history-aware defense-zoo columns (DESIGN.md §12) — centered
-    clipping must survive the variance attack that degrades ``mean``."""
+    clipping must survive the variance attack that degrades ``mean``;
+    ``hetero=True`` appends a non-IID block (Dirichlet label skew at
+    alpha=0.1, DESIGN.md §13) over the hetero defense suite."""
     task = tasks.make_teacher_task()
     ideal = common.ideal_accuracy(task, steps=steps)
     attacks = list(common.ATTACKS) + (list(ADAPTIVE_ATTACKS) if adaptive
@@ -75,10 +82,30 @@ def run(steps: int = 150, out_dir: str = "experiments/bench",
             r = cells[(attack, defense)]
             print(f"table1,{attack},{defense},{r['acc']:.4f},"
                   f"caught={r.get('caught_byz', '-')}")
+    # non-IID block: same protocol, Dirichlet label-skewed honest workers
+    hetero_rows = []
+    if hetero:
+        h_attacks = ("none", "variance")
+        h_scenarios = [
+            common.scenario_for(a, d, steps=steps, seed=k, task=task,
+                                hetero="dirichlet",
+                                hetero_alpha=HETERO_ALPHA)
+            for a in h_attacks for d in HETERO_DEFENSES
+            for k in range(seeds)]
+        h_results = engine.run_scenarios(h_scenarios, verbose=True)
+        hetero_rows = build_rows(h_scenarios, h_results)
+        h_cells = {(r["attack"], r["defense"]): r for r in hetero_rows}
+        for attack in h_attacks:
+            for defense in HETERO_DEFENSES:
+                r = h_cells[(attack, defense)]
+                print(f"table1-hetero,{attack},{defense},{r['acc']:.4f},"
+                      f"caught={r.get('caught_byz', '-')}")
+
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "table1.json"), "w") as f:
-        json.dump({"ideal": ideal, "seeds": seeds, "rows": rows}, f,
-                  indent=1)
+        json.dump({"ideal": ideal, "seeds": seeds, "rows": rows,
+                   "hetero_alpha": HETERO_ALPHA if hetero else None,
+                   "hetero_rows": hetero_rows}, f, indent=1)
 
     # markdown table — mean±std over seeds
     print(f"\nideal accuracy (honest-only SGD): {ideal:.4f}\n")
@@ -94,7 +121,22 @@ def run(steps: int = 150, out_dir: str = "experiments/bench",
             else:
                 parts.append(f"{r['acc']:.3f}")
         print(f"| {attack} | " + " | ".join(parts) + " |")
-    return rows
+
+    if hetero_rows:
+        h_cells = {(r["attack"], r["defense"]): r for r in hetero_rows}
+        print(f"\nnon-IID honest workers (Dirichlet alpha={HETERO_ALPHA})\n")
+        print("| attack | " + " | ".join(HETERO_DEFENSES) + " |")
+        print("|" + "---|" * (len(HETERO_DEFENSES) + 1))
+        for attack in ("none", "variance"):
+            parts = []
+            for defense in HETERO_DEFENSES:
+                r = h_cells[(attack, defense)]
+                if seeds > 1:
+                    parts.append(f"{r['acc_mean']:.3f}±{r['acc_std']:.3f}")
+                else:
+                    parts.append(f"{r['acc']:.3f}")
+            print(f"| {attack} | " + " | ".join(parts) + " |")
+    return rows + hetero_rows
 
 
 if __name__ == "__main__":

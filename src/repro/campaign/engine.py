@@ -13,9 +13,11 @@ and ~150 python-dispatched steps per grid cell.  The engine instead:
    ``attack_scale`` (all ``scaled_flip``/``safeguard_x*`` variants),
    ``threshold_floor`` (safeguard defenses), ``n_byz`` (defenses that do
    not consume b statically), the ``adapt_*`` controller knobs of the
-   feedback-coupled adaptive attacks (DESIGN.md §11), and the
+   feedback-coupled adaptive attacks (DESIGN.md §11), the
    ``clip_tau``/``clip_beta``/``spectral_iters`` knobs of the stateful
-   defense zoo (DESIGN.md §12);
+   defense zoo (DESIGN.md §12), and the ``hetero_alpha``/``hetero_shift``
+   knobs of the worker-heterogeneity models (DESIGN.md §13 — the hetero
+   *mode* and ``bucket_s`` are program structure and live in the key);
 3. groups scenarios by :func:`batch_key` — everything that changes the
    traced program (attack family, defense, m, steps, windows, task shape)
    — so a 6x7x5-seed Table-1 grid compiles ~35 programs instead of
@@ -45,6 +47,7 @@ from repro.campaign.scenario import Scenario, scenario_id
 from repro.configs.base import TrainConfig
 from repro.core import attacks as atk_lib
 from repro.core import defenses as dfn_lib
+from repro.data import hetero as het_lib
 from repro.data import tasks
 from repro.data.pipeline import flip_labels, worker_split
 from repro.optim import make_optimizer
@@ -75,6 +78,8 @@ def batch_key(s: Scenario) -> Tuple:
     return (fam, s.defense, s.m, s.steps, s.lr, s.batch, s.optimizer,
             s.momentum, s.T0, s.T1, s.reset_period, s.delay, s.burst_start,
             s.burst_length, s.d_in, s.d_hidden, s.n_classes, s.task_seed,
+            s.hetero,
+            s.bucket_s if s.defense.startswith("bucketing") else None,
             s.n_byz if s.defense in STATIC_NBYZ_DEFENSES else None)
 
 
@@ -127,9 +132,10 @@ def _build_defense(rep: Scenario, knobs) -> dfn_lib.Defense:
     reg = dfn_lib.make_registry(
         rep.m, rep.n_byz if static else knobs["n_byz"],
         T0=rep.T0, T1=rep.T1, threshold_floor=knobs["threshold_floor"],
+        threshold_scale=knobs["threshold_scale"],
         reset_period=rep.reset_period, clip_tau=knobs["clip_tau"],
         clip_beta=knobs["clip_beta"],
-        spectral_iters=knobs["spectral_iters"])
+        spectral_iters=knobs["spectral_iters"], bucket_s=rep.bucket_s)
     if rep.defense not in reg:
         raise ValueError(f"unknown defense {rep.defense!r}")
     return reg[rep.defense]
@@ -138,10 +144,11 @@ def _build_defense(rep: Scenario, knobs) -> dfn_lib.Defense:
 def make_trial_fn(rep: Scenario):
     """Build ``trial(knobs) -> result`` for the family ``rep`` represents.
 
-    ``knobs`` is a dict of four scalars (``seed``, ``attack_scale``,
-    ``threshold_floor``, ``n_byz``) — the vmappable axes.  Everything else
-    about ``rep`` is baked into the traced program, which is why only
-    scenarios sharing :func:`batch_key` may be stacked into one call.
+    ``knobs`` is the dict of vmappable scalars built by
+    :func:`stack_knobs` (seed, attack/filter/defense knobs, the hetero
+    knobs).  Everything else about ``rep`` is baked into the traced
+    program, which is why only scenarios sharing :func:`batch_key` may be
+    stacked into one call.
     """
     family, _ = attack_family(rep)
     task = tasks.make_teacher_task(rep.d_in, rep.d_hidden, rep.n_classes,
@@ -166,11 +173,26 @@ def make_trial_fn(rep: Scenario):
                                   jit=False)
 
         # In-scan data generation, bit-compatible with the python
-        # iterator ``tasks.teacher_batches(task, batch, seed, m, flip)``.
+        # iterators ``tasks.teacher_batches`` / ``hetero.hetero_batches``
+        # (same key schedule; the "iid" mode is the pre-heterogeneity
+        # path, traced without any hetero machinery).
+        mix_w = None
+        if rep.hetero == "dirichlet":
+            # per-trial mixture draw (traced: seed and alpha are lanes)
+            mix_w = het_lib.worker_mixtures(
+                het_lib.mixture_key(seed), knobs["hetero_alpha"], rep.m,
+                rep.n_classes)
+
         def batch_fn(t):
             key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0xDA7A), t)
-            out = worker_split(tasks.teacher_batch(task, key, rep.batch),
-                               rep.m)
+            if rep.hetero == "iid":
+                out = worker_split(tasks.teacher_batch(task, key,
+                                                       rep.batch), rep.m)
+            else:
+                out = het_lib.hetero_worker_batch(
+                    task, key, rep.batch, rep.m, mode=rep.hetero,
+                    weights=mix_w, alpha=knobs["hetero_alpha"],
+                    shift=knobs["hetero_shift"])
             if data_attack:
                 flipped = flip_labels(out["y"], rep.n_classes)
                 sel = byz_mask.reshape((rep.m, 1))
@@ -216,6 +238,8 @@ def stack_knobs(group: Sequence[Scenario]) -> Dict[str, jax.Array]:
                                     jnp.float32),
         "threshold_floor": jnp.asarray([s.threshold_floor for s in group],
                                        jnp.float32),
+        "threshold_scale": jnp.asarray([s.threshold_scale for s in group],
+                                       jnp.float32),
         "n_byz": jnp.asarray([s.n_byz for s in group], jnp.int32),
         # adaptive-attack controller knobs (DESIGN.md §11) — pure
         # arithmetic inside the observe/act closures, so every adaptive
@@ -236,6 +260,15 @@ def stack_knobs(group: Sequence[Scenario]) -> Dict[str, jax.Array]:
                                  jnp.float32),
         "spectral_iters": jnp.asarray([s.spectral_iters for s in group],
                                       jnp.int32),
+        # worker-heterogeneity knobs (DESIGN.md §13) — the Dirichlet
+        # concentration and the concept-shift angle feed only fixed-shape
+        # sampling arithmetic inside the hetero batch_fn, so every alpha
+        # / shift variant of one hetero mode is a lane of the same
+        # program (inf is a valid lane value: exact-IID sentinel)
+        "hetero_alpha": jnp.asarray([s.hetero_alpha for s in group],
+                                    jnp.float32),
+        "hetero_shift": jnp.asarray([s.hetero_shift for s in group],
+                                    jnp.float32),
     }
 
 
@@ -256,7 +289,12 @@ def _lane_record(lane: Dict) -> Dict:
             rec[k] = int(lane[k])
     if "final_good" in lane:
         rec["final_good"] = lane["final_good"]
-    rec["traces"] = lane["traces"]
+    traces = lane["traces"]
+    if "zeta_sq" in traces:
+        # measured heterogeneity alongside accuracy (DESIGN.md §13):
+        # trial-mean honest dissimilarity, reported per cell
+        rec["zeta_sq_mean"] = float(jnp.asarray(traces["zeta_sq"]).mean())
+    rec["traces"] = traces
     return rec
 
 

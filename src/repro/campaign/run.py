@@ -18,6 +18,10 @@ knob axes into vmap lanes, see ``engine.batch_key``):
   defense          the history-aware defense zoo (DESIGN.md §12) x
                    {variance, adaptive_flip} — clip/spectral knobs are
                    vmap lanes like seeds
+  hetero           worker-heterogeneity subsystem (DESIGN.md §13):
+                   Dirichlet label-skew alpha sweep x defense x attack
+                   plus a teacher-rotation concept-shift block — the
+                   hetero_alpha/hetero_shift knobs are vmap lanes
   smoke            2x2 mini-grid for CI / tests
 
 A second invocation with the same arguments runs 0 new cells (the store
@@ -32,10 +36,10 @@ import time
 from typing import Callable, Dict, List
 
 from repro.campaign import engine
-from repro.campaign.scenario import (ADAPTIVE_ATTACKS, Scenario,
-                                     TABLE1_ATTACKS, TABLE1_DEFENSES,
-                                     ZOO_DEFENSES, expand_grid,
-                                     scenario_id, with_seeds)
+from repro.campaign.scenario import (ADAPTIVE_ATTACKS, HETERO_DEFENSES,
+                                     Scenario, TABLE1_ATTACKS,
+                                     TABLE1_DEFENSES, ZOO_DEFENSES,
+                                     expand_grid, scenario_id, with_seeds)
 from repro.campaign.store import DEFAULT_ROOT, CampaignStore
 
 
@@ -84,6 +88,32 @@ def _adaptive(seeds: int, steps: int) -> List[Scenario]:
     return with_seeds(grid, seeds)
 
 
+def _hetero(seeds: int, steps: int) -> List[Scenario]:
+    """Worker-heterogeneity campaign (DESIGN.md §13): non-IID honest
+    workers are where selection-style defenses (krum, trimmed_mean)
+    falsely evict honest outliers and where bucketing repairs them.
+    Dirichlet label-skew alpha sweep (every alpha a vmap lane) across
+    the hetero defense suite under {no attack, variance, adaptive_flip},
+    plus a teacher-rotation concept-shift block."""
+    alphas = [0.05, 1.0, 10.0]
+    attacks = ["none", "variance", "adaptive_flip"]
+    no_sg = [d for d in HETERO_DEFENSES if d != "safeguard_double"]
+    grid = expand_grid(hetero=["dirichlet"], hetero_alpha=alphas,
+                       attack=attacks, defense=no_sg, steps=[steps])
+    # the safeguard runs both its IID calibration (eviction multiplier
+    # 1.5 — shows the concentration filter stressed by honest skew) and
+    # the zeta-relaxed lane (2.0 — evicts nobody, still catches the
+    # variance colluders); both scales are lanes of one program
+    grid += expand_grid(hetero=["dirichlet"], hetero_alpha=alphas,
+                        attack=attacks, defense=["safeguard_double"],
+                        threshold_scale=[1.5, 2.0], steps=[steps])
+    grid += expand_grid(hetero=["shift"], hetero_shift=[0.5, 1.5],
+                        attack=["none", "variance"],
+                        defense=["mean", "safeguard_double",
+                                 "centered_clip"], steps=[steps])
+    return with_seeds(grid, seeds)
+
+
 def _smoke(seeds: int, steps: int) -> List[Scenario]:
     grid = expand_grid(attack=["sign_flip", "variance"],
                        defense=["safeguard_double", "coord_median"],
@@ -98,6 +128,7 @@ CAMPAIGNS: Dict[str, Callable[[int, int], List[Scenario]]] = {
     "threshold_sweep": _threshold_sweep,
     "adaptive": _adaptive,
     "defense": _defense,
+    "hetero": _hetero,
     "smoke": _smoke,
 }
 
@@ -138,8 +169,11 @@ def main(argv=None) -> Dict:
             rec = results[scenario_id(s)]
             store.append(s, rec, store_traces=args.store_traces)
             caught = rec.get("caught_byz", "-")
+            zeta = rec.get("zeta_sq_mean")
+            zeta = f",zeta_sq={zeta:.4g}" if zeta is not None else ""
             print(f"campaign,{args.campaign},{s.attack},{s.defense},"
-                  f"seed={s.seed},acc={rec['acc']:.4f},caught={caught}")
+                  f"seed={s.seed},acc={rec['acc']:.4f},caught={caught}"
+                  f"{zeta}")
     wall = time.time() - t0
     store.write_meta({"campaign": args.campaign, "seeds": args.seeds,
                       "steps": steps, "cells": len(scenarios),

@@ -33,7 +33,9 @@ import json
 from typing import Dict, Iterable, List, Sequence
 
 from repro.core.attacks import ADAPTIVE_DEFAULTS, VARIANCE_Z
-from repro.core.defenses import DEFENSE_DEFAULTS
+from repro.core.defenses import (DEFENSE_DEFAULTS, bucketing_krum_feasible,
+                                 derive_bucket_nbyz)
+from repro.data.hetero import HETERO_MODELS
 
 # The paper's Table 1 grid (Section 5 / Appendix C) — canonical lists,
 # re-exported by benchmarks.common for back-compat.
@@ -48,6 +50,11 @@ ADAPTIVE_ATTACKS = ("adaptive_flip", "adaptive_variance", "oscillating",
 # History-aware defense zoo (DESIGN.md §12) — stateful defenses beyond
 # the paper's grid; their clip/spectral knobs are vmap axes.
 ZOO_DEFENSES = ("centered_clip", "norm_filter", "dnc", "safeguard_cclip")
+# The heterogeneity campaign's defense suite (DESIGN.md §13): the
+# selection-style rules that suffer under non-IID honest workers, the
+# bounded-influence rules that do not, and bucketing as the repair.
+HETERO_DEFENSES = ("mean", "krum", "trimmed_mean", "centered_clip",
+                   "bucketing_krum", "safeguard_double")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +77,10 @@ class Scenario:
     T0: int = 20
     T1: int = 120
     threshold_floor: float = 0.1
+    # empirical-filter eviction multiplier (vmap axis like the floor);
+    # default is the paper's IID calibration, the hetero campaign runs a
+    # zeta-relaxed lane (DESIGN.md §13)
+    threshold_scale: float = DEFENSE_DEFAULTS["threshold_scale"]
     reset_period: int = 0
     # attack knobs
     attack_scale: float = 0.0     # scaled_flip family; 0 -> from the name
@@ -91,11 +102,67 @@ class Scenario:
     clip_tau: float = DEFENSE_DEFAULTS["clip_tau"]
     clip_beta: float = DEFENSE_DEFAULTS["clip_beta"]
     spectral_iters: int = DEFENSE_DEFAULTS["spectral_iters"]
+    # worker-heterogeneity model (DESIGN.md §13): the model name is
+    # program structure (each mode traces its own batch_fn; "iid" is
+    # exactly the pre-heterogeneity path), the knobs are vmap axes
+    hetero: str = "iid"
+    hetero_alpha: float = 0.0     # Dirichlet label-skew concentration;
+    #                               <= 0 and inf both mean IID (bit-exact)
+    hetero_shift: float = 0.0     # teacher-rotation concept shift, radians
+    # bucketing meta-defense: workers per bucket — static shape structure
+    # (the wrapped aggregator runs on m / bucket_s rows), so it is part
+    # of batch_key for bucketing_* defenses, never a vmap knob
+    bucket_s: int = DEFENSE_DEFAULTS["bucket_s"]
     # teacher-student task shape
     d_in: int = 32
     d_hidden: int = 64
     n_classes: int = 10
     task_seed: int = 0
+
+    def __post_init__(self):
+        # loud, construction-time validation: these used to surface as a
+        # worker_split reshape error (or a bucket-shape error) from the
+        # middle of a traced scan, steps away from the bad grid axis
+        if self.m > 0 and self.batch % self.m:
+            raise ValueError(
+                f"scenario {self.attack}/{self.defense} (seed={self.seed}): "
+                f"batch={self.batch} is not divisible by m={self.m} — "
+                "worker_split would fail mid-scan")
+        if self.hetero not in HETERO_MODELS:
+            raise ValueError(
+                f"scenario {self.attack}/{self.defense}: unknown hetero "
+                f"model {self.hetero!r} (one of {HETERO_MODELS})")
+        if self.bucket_s < 1:
+            # validated for EVERY defense: the engine forwards bucket_s
+            # to make_registry unconditionally, where 0 would be an
+            # unnamed ZeroDivisionError mid-campaign
+            raise ValueError(
+                f"scenario {self.attack}/{self.defense}: bucket_s="
+                f"{self.bucket_s} must be >= 1")
+        if self.defense.startswith("bucketing"):
+            if self.m % self.bucket_s:
+                raise ValueError(
+                    f"scenario {self.attack}/{self.defense}: m={self.m} is "
+                    f"not divisible by bucket_s={self.bucket_s}")
+            if self.m // self.bucket_s < 3:
+                raise ValueError(
+                    f"scenario {self.attack}/{self.defense}: bucket_s="
+                    f"{self.bucket_s} leaves only {self.m // self.bucket_s}"
+                    " buckets (< 3) — the wrapped rule has nothing to "
+                    "aggregate over")
+            if (self.defense == "bucketing_krum"
+                    and not bucketing_krum_feasible(self.m, self.n_byz,
+                                                    self.bucket_s)):
+                # the registry's feasibility gate (single source), here
+                # so an unsound combination fails scenario-named at
+                # construction instead of as "unknown defense" from the
+                # engine mid-campaign
+                raise ValueError(
+                    f"scenario {self.attack}/{self.defense}: "
+                    f"ceil(n_byz/bucket_s)="
+                    f"{derive_bucket_nbyz(self.n_byz, self.bucket_s)} "
+                    "corrupt buckets exceed what inner Krum tolerates on "
+                    f"{self.m // self.bucket_s} buckets (needs m > b + 2)")
 
     def asdict(self) -> Dict:
         return dataclasses.asdict(self)

@@ -47,7 +47,12 @@ The zoo (:func:`make_registry`):
     projection onto the top singular direction of the centered gradient
     matrix, power iteration warm-started across steps;
   * ``safeguard_cclip`` — composition: the safeguard's windowed filter
-    picks the good set, centered clipping aggregates over it.
+    picks the good set, centered clipping aggregates over it;
+  * ``bucketing_*`` — :func:`make_bucketing` [Karimireddy, He & Jaggi
+    2022] as a *meta*-defense: per-step random s-bucket averaging in
+    front of any wrapped aggregator (``bucketing_krum``,
+    ``bucketing_cclip``), shrinking inter-worker heterogeneity by ~1/s
+    before selection-style rules see the rows (DESIGN.md §13).
 
 All stateful defenses operate on the flat ``(m, d_pad)`` buffer layout
 of ``core.safeguard`` (one ``flatten_stacked`` per step), so the
@@ -80,7 +85,18 @@ DEFENSE_DEFAULTS = {
     "clip_tau": 1.0,        # clip radius, relative to the median deviation
     "clip_beta": 0.9,       # worker-momentum EMA coefficient
     "spectral_iters": 4,    # DnC power-iteration steps per aggregation
+    "bucket_s": 2,          # bucketing meta-defense: workers per bucket
+    # empirical-filter eviction multiplier (paper Appendix C.1) — single
+    # source is the SafeguardConfig field default.  1.5 is the paper's
+    # IID calibration; under measured heterogeneity zeta the honest
+    # spread-to-median ratio grows, so the hetero campaign runs a
+    # relaxed lane (DESIGN.md §13)
+    "threshold_scale": sg.SafeguardConfig.threshold_scale,
 }
+
+# Decouples the bucketing permutation stream from the safeguard's noise
+# consumer of the same scan-threaded step rng (ctx["rng"]).
+BUCKET_SALT = 0xB0C4
 
 _CLIP_ITERS = 3             # fixed inner clipping iterations (static)
 # Static power-iteration scan length; the `spectral_iters` knob masks the
@@ -432,6 +448,110 @@ def make_safeguard_cclip(cfg: sg.SafeguardConfig,
 
 
 # --------------------------------------------------------------------------
+# Bucketing as a meta-defense
+# --------------------------------------------------------------------------
+
+def derive_bucket_nbyz(n_byz: int, s: int) -> int:
+    """Byzantine budget for the *inner* aggregator after s-bucketing:
+    each Byzantine worker contaminates at most one bucket, so at most
+    ``ceil(b / s)`` bucket means are corrupt [Karimireddy, He & Jaggi
+    2022, Lemma 1].  NOT capped — if the wrapped rule cannot tolerate
+    this many corrupt inputs the combination is unsound, and the
+    registry must omit it rather than silently understate the budget."""
+    return -(-int(n_byz) // s)
+
+
+def bucketing_krum_feasible(m: int, n_byz: int, s: int) -> bool:
+    """Can inner Krum tolerate ``ceil(n_byz / s)`` corrupt bucket means
+    on ``m / s`` buckets (Krum needs m > b + 2)?  THE single source for
+    the registry's registration gate and the Scenario construction-time
+    check — one recalibration site, no drift."""
+    if s < 1 or m % s or m // s < 3:
+        return False
+    return derive_bucket_nbyz(n_byz, s) <= m // s - 3
+
+
+def make_bucketing(inner: Defense, m: int, s: int,
+                   name: Optional[str] = None) -> Defense:
+    """[Karimireddy, He & Jaggi 2022] s-bucket random averaging before
+    ANY wrapped aggregator: each step draws a fresh worker permutation
+    from the scan-threaded rng (``ctx["rng"]``, salted), averages
+    consecutive groups of ``s`` permuted workers into ``m/s`` bucket
+    means, and hands those to the wrapped defense as if they were
+    workers.  Averaging s random workers shrinks inter-"worker"
+    heterogeneity by ~1/s, which is exactly what stops selection-style
+    rules (Krum, medians) from locking onto one skewed shard under
+    non-IID data (DESIGN.md §13) — while Byzantine influence stays
+    bounded (a colluder corrupts at most its own bucket).
+
+    The wrapped defense runs at ``m_inner = m / s``; its state (if any)
+    is bucket-shaped and threads through unchanged.  Bucket-level
+    ``good`` decisions are mapped back through the permutation to the
+    ``(m,)`` worker surface the trainer and the adaptive attacks
+    observe; bucket-level score/distance arrays are dropped (their
+    worker axis is the wrong size for the feedback protocol), scalar
+    diagnostics pass through.
+    """
+    if s < 1:
+        raise ValueError(f"bucketing needs s >= 1, got {s}")
+    if m % s:
+        raise ValueError(f"bucketing: m={m} not divisible by bucket size "
+                         f"s={s}")
+    if inner.needs_held_batch:
+        raise ValueError("bucketing cannot wrap a held-batch defense "
+                         f"({inner.name}): its score oracle is per-worker, "
+                         "not per-bucket")
+    n_buckets = m // s
+
+    def aggregate(state, grads, ctx):
+        rng = (ctx or {}).get("rng")
+        if rng is None:
+            raise ValueError("bucketing needs ctx['rng'] (the "
+                             "scan-threaded step rng)")
+        perm = jax.random.permutation(jax.random.fold_in(rng, BUCKET_SALT),
+                                      m)
+
+        def bucketize(leaf):
+            p = jnp.take(leaf, perm, axis=0)
+            p = p.reshape((n_buckets, s) + leaf.shape[1:])
+            return p.astype(f32).mean(axis=1).astype(leaf.dtype)
+
+        buckets = jax.tree.map(bucketize, grads)
+        agg, new_state, binfo = inner.aggregate(state, buckets, ctx)
+        # bucket decision -> worker surface: a worker is good iff its
+        # bucket survived this step's inner aggregation
+        good = jnp.zeros((m,), bool).at[perm].set(
+            jnp.repeat(binfo["good"], s))
+        info = _masked_info(good)
+        info["bucket_good"] = binfo["good"]
+        for k, v in binfo.items():
+            if k in ("good", "n_good") or k.startswith("threshold"):
+                continue                       # wrong worker axis / surface
+            if getattr(v, "ndim", None) == 0:
+                info[k] = v
+        return agg, new_state, info
+
+    # flat_state stays False even for a flat-buffer inner: the inner
+    # state has m/s rows, not the m worker rows the flat_acc_pspec
+    # sharding contract promises (launch/specs would otherwise pin an
+    # m-row spec onto a bucket-shaped buffer)
+    return Defense(name or f"bucketing_{inner.name}", aggregate,
+                   init_state=inner.init_state,
+                   static_nbyz=inner.static_nbyz)
+
+
+def _bucketing_static_nbyz_placeholder(name: str) -> Defense:
+    """Registry slot for a bucketing-wrapped static-n_byz defense when the
+    registry was built with a *traced* n_byz: the bucket Byzantine
+    budget (``derive_bucket_nbyz``) is python slice structure, so such
+    an entry can exist for name lookups but must never aggregate."""
+    def aggregate(state, grads, ctx):
+        raise ValueError(f"{name} consumes n_byz statically; build the "
+                         "registry with a concrete n_byz to use it")
+    return Defense(name, aggregate, static_nbyz=True)
+
+
+# --------------------------------------------------------------------------
 # Registry
 # --------------------------------------------------------------------------
 
@@ -441,6 +561,8 @@ def make_registry(m: int, n_byz, *, T0: int = 20, T1: int = 120,
                   clip_tau=DEFENSE_DEFAULTS["clip_tau"],
                   clip_beta=DEFENSE_DEFAULTS["clip_beta"],
                   spectral_iters=DEFENSE_DEFAULTS["spectral_iters"],
+                  bucket_s: int = DEFENSE_DEFAULTS["bucket_s"],
+                  threshold_scale=DEFENSE_DEFAULTS["threshold_scale"],
                   norm_mult: float = 2.0,
                   norm_ema_beta: float = 0.9) -> Dict[str, Defense]:
     """Every defense, parameterized the way the paper's protocol runs
@@ -456,6 +578,7 @@ def make_registry(m: int, n_byz, *, T0: int = 20, T1: int = 120,
     def sg_cfg(mode):
         return sg.SafeguardConfig(m=m, T0=T0, T1=T1, mode=mode,
                                   threshold_floor=threshold_floor,
+                                  threshold_scale=threshold_scale,
                                   reset_period=reset_period,
                                   use_sketch=use_sketch)
 
@@ -492,12 +615,38 @@ def make_registry(m: int, n_byz, *, T0: int = 20, T1: int = 120,
         reg["safeguard_cclip"] = make_safeguard_cclip(sg_cfg("double"),
                                                       tau=clip_tau,
                                                       beta=clip_beta)
+    # bucketing meta-defense (DESIGN.md §13): registered whenever the
+    # bucket shapes work out (m divisible, enough buckets for the inner
+    # rule); an incompatible population simply omits the entries, like
+    # the sketched registry omits safeguard_cclip
+    if bucket_s >= 1 and m % bucket_s == 0 and (m // bucket_s) >= 3:
+        nb = m // bucket_s
+        if not isinstance(n_byz, (int, np.integer)):
+            # traced n_byz (a campaign knob for some OTHER defense in the
+            # same registry build): keep the name resolvable, refuse use
+            reg["bucketing_krum"] = _bucketing_static_nbyz_placeholder(
+                "bucketing_krum")
+        elif bucketing_krum_feasible(m, n_byz, bucket_s):
+            # only register when inner Krum can actually tolerate
+            # ceil(b/s) corrupt bucket means — an unsound combination is
+            # omitted, never silently weakened
+            inner_krum = _stateless(
+                "krum", functools.partial(
+                    agg_lib.krum,
+                    n_byz=derive_bucket_nbyz(n_byz, bucket_s)),
+                static_nbyz=True)
+            reg["bucketing_krum"] = make_bucketing(inner_krum, m, bucket_s)
+        reg["bucketing_cclip"] = make_bucketing(
+            make_centered_clip(nb, tau=clip_tau, beta=clip_beta),
+            m, bucket_s, name="bucketing_cclip")
     return reg
 
 
 def static_nbyz_names() -> frozenset:
     """Defense names that consume ``n_byz`` as program structure — the
     campaign engine keys its batch groups on this (single source; the
-    frozenset previously hard-coded in ``campaign.engine``)."""
-    return frozenset(name for name, d in make_registry(6, 1).items()
+    frozenset previously hard-coded in ``campaign.engine``).  The probe
+    population (m=8, b=1) is the smallest where every registry entry —
+    including bucketing_krum's feasibility gate — registers."""
+    return frozenset(name for name, d in make_registry(8, 1).items()
                      if d.static_nbyz)

@@ -151,6 +151,20 @@ def tree_masked_mean(tree, mask: jax.Array):
     return jax.tree.map(one, tree)
 
 
+def tree_dissimilarity(tree, mask: jax.Array) -> jax.Array:
+    """Mean squared distance of the masked workers' rows to their own
+    mean: ``E_{i in mask} ||g_i - g_bar_mask||^2`` — the measured
+    zeta^2 heterogeneity of the non-IID assumption (DESIGN.md §13).
+    O(m d): one masked mean, one row-norm pass, no Gram."""
+    w = mask.astype(jnp.float32)
+    center = tree_masked_mean(tree, mask)
+    diffs = jax.tree.map(
+        lambda g, c: g.astype(jnp.float32) - c[None].astype(jnp.float32),
+        tree, center)
+    sq = tree_row_sq_norms(diffs)
+    return (sq * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
 def tree_stack_flatten(tree):
     """Stacked pytree -> dense ``(m, d)`` matrix (small models only)."""
     leaves = jax.tree_util.tree_leaves(tree)

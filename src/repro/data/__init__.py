@@ -2,3 +2,6 @@ from repro.data.pipeline import (   # noqa: F401
     lm_batches, stub_batches, worker_split, flip_labels)
 from repro.data.tasks import (      # noqa: F401
     TeacherTask, make_teacher_task, teacher_batches)
+from repro.data.hetero import (     # noqa: F401
+    HETERO_MODELS, hetero_batches, hetero_worker_batch, worker_mixtures,
+    zeta_sq)

@@ -1,0 +1,226 @@
+"""Worker-heterogeneity models: non-IID data for the *honest* workers.
+
+Everything else in ``repro.data`` realizes the paper's Assumption 2.1 —
+every honest worker draws i.i.d. from one distribution.  This module
+relaxes exactly that assumption (DESIGN.md §13), following the two
+standard non-IID models of the Byzantine-ML literature (Data & Diggavi
+2020; Karimireddy, He & Jaggi 2022):
+
+* **Dirichlet label skew** (``mode="dirichlet"``) — worker ``i`` draws a
+  per-class mixture ``pi_i ~ Dirichlet(alpha * 1)`` once per trial
+  (:func:`worker_mixtures`, shape ``(m, n_classes)``) and then samples
+  its shard from the shared pool with per-example weight
+  ``pi_i[label]`` (:func:`dirichlet_indices`, Gumbel-max selection).
+  ``alpha -> 0`` gives near single-class workers, ``alpha -> inf``
+  recovers the IID split *bit-for-bit* (the selection is gated on
+  :func:`skew_active`, so the inactive branch IS the contiguous
+  ``worker_split`` reshape).
+
+* **Teacher-rotation concept shift** (``mode="shift"``) — worker ``i``
+  labels its (IID-split) inputs with the teacher evaluated on inputs
+  rotated by a per-worker angle ``theta_i`` spread over ``[-shift,
+  +shift]`` radians (:func:`shift_angles`, planar rotation of
+  coordinate pairs).  The workers disagree about ``P(y | x)`` itself —
+  the model family where dissimilarity does not vanish with batch size.
+  ``shift = 0`` is bit-for-bit IID.
+
+Both models are parameterized by *traced f32 knobs* (``alpha`` /
+``shift``) and use only fixed-shape jax ops, so whole trials stay
+``lax.scan``-able and the campaign engine vmaps ``hetero_alpha`` /
+``hetero_shift`` exactly like the ``adapt_*`` and ``clip_*`` axes.
+The per-trial mixture key and the per-step selection key are derived
+with the same salted fold-in scheme on both the engine path (in-scan
+``batch_fn``) and the legacy iterator path (:func:`hetero_batches`),
+which is what keeps the two bit-identical.
+
+The module also provides the measured-heterogeneity estimator
+:func:`zeta_sq` — the inter-worker gradient dissimilarity
+``zeta^2 = E_i ||g_i - g_bar||^2`` of the bounded-heterogeneity
+assumption that replaces Assumption 2.1 in the non-IID line of work —
+which the trainer traces every step (``zeta_sq`` over the ground-truth
+honest set, ``zeta_good_sq`` over the defense's live good set).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tree_utils as tu
+from repro.data.pipeline import flip_labels, worker_split
+
+f32 = jnp.float32
+
+# Registered model names — ``Scenario.hetero`` is validated against this
+# (program structure for the campaign engine: each mode traces its own
+# batch_fn, and "iid" is exactly the pre-heterogeneity path).
+HETERO_MODELS = ("iid", "dirichlet", "shift")
+
+# Key salts.  The per-trial mixture key is PRNGKey(seed ^ MIX_SALT); the
+# per-step selection key is fold_in(step_key, SEL_SALT) where step_key is
+# the data pipeline's fold_in(PRNGKey(seed ^ 0xDA7A), t).  Both the
+# engine's in-scan batch_fn and the python iterator derive keys this way
+# — single source, bit-identical paths.
+MIX_SALT = 0x4E7E
+SEL_SALT = 0x5E1E
+
+# Dirichlet concentration is clamped to this range before the sampler
+# (concentration 0 and inf are NaN factories); values outside the
+# active range never reach the sampler — ``skew_active`` gates them
+# onto the exact IID branch first.
+ALPHA_MIN, ALPHA_MAX = 1e-3, 1e6
+
+
+def skew_active(alpha) -> jax.Array:
+    """Label skew is on for finite positive ``alpha``; ``alpha <= 0`` and
+    ``alpha = inf`` both mean IID — the latter is also the model's own
+    limit (Dirichlet(inf) is the uniform mixture), so the sentinel and
+    the mathematical limit agree."""
+    a = jnp.asarray(alpha, f32)
+    return jnp.isfinite(a) & (a > 0)
+
+
+def shift_active(shift) -> jax.Array:
+    return jnp.asarray(shift, f32) != 0
+
+
+def mixture_key(seed) -> jax.Array:
+    """Per-trial key for :func:`worker_mixtures` (``seed`` may be traced —
+    the engine's vmapped seed lane)."""
+    return jax.random.PRNGKey(seed ^ MIX_SALT)
+
+
+def worker_mixtures(key, alpha, m: int, n_classes: int) -> jax.Array:
+    """``(m, n_classes)`` per-worker class mixtures ``pi_i ~
+    Dirichlet(alpha * 1)`` — normalized gammas, so ``alpha`` may be a
+    traced scalar (vmap knob).  Inactive ``alpha`` (<= 0 or inf) yields
+    the exact uniform mixture.
+
+    Sampled in LOG space (``loggamma`` + logsumexp): at strong skew an
+    f32 ``gamma(alpha)`` variate underflows to 0.0 for a large fraction
+    of draws (alpha = 1e-3: ~40% all-zero rows), and a zero row would
+    silently turn that worker's weighted selection into *uniform*
+    sampling — the opposite of the requested skew.  Log-space
+    normalization keeps every row's maximum at >= 1/n_classes by
+    construction; only genuinely negligible entries flush to zero."""
+    a = jnp.asarray(alpha, f32)
+    safe = jnp.clip(jnp.where(skew_active(a), a, 1.0), ALPHA_MIN, ALPHA_MAX)
+    lg = jax.random.loggamma(key, safe, shape=(m, n_classes), dtype=f32)
+    pi = jnp.exp(lg - jax.nn.logsumexp(lg, axis=-1, keepdims=True))
+    uniform = jnp.full((m, n_classes), 1.0 / n_classes, f32)
+    return jnp.where(skew_active(a), pi, uniform)
+
+
+def dirichlet_indices(key, labels: jax.Array, weights: jax.Array,
+                      m: int, per: int) -> jax.Array:
+    """``(m, per)`` pool indices for the label-skew partitioner.
+
+    Slot ``(i, j)`` is a Gumbel-max draw over the pool with log-weight
+    ``log pi_i[labels[b]]`` — i.e. ``P(slot picks b) = pi_i[y_b] /
+    sum_b' pi_i[y_b']``, the pool marginal reweighted by worker ``i``'s
+    mixture.  Sampling is with replacement (the pool is an infinite
+    synthetic stream, not a finite dataset), which is what keeps shapes
+    static: every worker shard is exactly ``per`` examples regardless
+    of how skewed the mixture is.
+    """
+    logw = jnp.log(jnp.maximum(weights[:, labels], 1e-30))     # (m, B)
+    gum = jax.random.gumbel(key, (m, per) + labels.shape, f32)
+    return jnp.argmax(logw[:, None, :] + gum, axis=-1).astype(jnp.int32)
+
+
+def shift_angles(shift, m: int) -> jax.Array:
+    """``(m,)`` per-worker rotation angles spread evenly over
+    ``[-shift, +shift]`` radians (``shift`` may be traced)."""
+    span = 2.0 * jnp.arange(m, dtype=f32) / max(m - 1, 1) - 1.0
+    return jnp.asarray(shift, f32) * span
+
+
+def rotate_pairs(x: jax.Array, theta: jax.Array) -> jax.Array:
+    """Planar rotation of consecutive coordinate pairs of ``x`` by
+    ``theta`` (broadcast against ``x[..., 0]``); an odd trailing
+    coordinate passes through."""
+    d = x.shape[-1]
+    k = d // 2
+    a, b = x[..., 0:2 * k:2], x[..., 1:2 * k:2]
+    c, s = jnp.cos(theta)[..., None], jnp.sin(theta)[..., None]
+    rot = jnp.stack([a * c - b * s, a * s + b * c], axis=-1)
+    rot = rot.reshape(x.shape[:-1] + (2 * k,))
+    if 2 * k < d:
+        rot = jnp.concatenate([rot, x[..., 2 * k:]], axis=-1)
+    return rot
+
+
+def hetero_worker_batch(task, key, batch: int, m: int, *, mode: str,
+                        weights: Optional[jax.Array] = None,
+                        alpha=0.0, shift=0.0) -> dict:
+    """One worker-split teacher batch ``{"x": (m, B/m, d), "y": (m, B/m)}``
+    under a heterogeneity model.
+
+    ``key`` is the step key of the IID pipeline (``fold_in(PRNGKey(seed ^
+    0xDA7A), t)``) — the shared pool is ``tasks.teacher_batch(task, key,
+    batch)`` for every mode, so an inactive knob reproduces the IID
+    split bit-for-bit.  ``alpha``/``shift`` may be traced scalars;
+    ``weights`` is the per-trial :func:`worker_mixtures` draw (required
+    for ``mode="dirichlet"``).
+    """
+    from repro.data import tasks   # tasks lazily imports pipeline: no cycle
+    if mode not in HETERO_MODELS:
+        raise ValueError(f"unknown hetero model {mode!r} "
+                         f"(one of {HETERO_MODELS})")
+    pool = tasks.teacher_batch(task, key, batch)
+    out = worker_split(pool, m)
+    if mode == "iid":
+        return out
+    per = batch // m
+    if mode == "dirichlet":
+        if weights is None:
+            raise ValueError("dirichlet mode needs per-worker mixture "
+                             "weights (worker_mixtures)")
+        idx_iid = jnp.arange(batch, dtype=jnp.int32).reshape(m, per)
+        idx_skew = dirichlet_indices(jax.random.fold_in(key, SEL_SALT),
+                                     pool["y"], weights, m, per)
+        # row-gather with the IID indices is bit-identical to the reshape,
+        # so the inactive branch IS the IID split
+        idx = jnp.where(skew_active(alpha), idx_skew, idx_iid)
+        return {"x": pool["x"][idx], "y": pool["y"][idx]}
+    # mode == "shift": same shards, per-worker rotated-teacher labels
+    theta = shift_angles(shift, m)
+    xr = rotate_pairs(out["x"], theta[:, None])
+    y_rot = tasks.mlp_apply(task.teacher, xr).argmax(-1).astype(jnp.int32)
+    y = jnp.where(shift_active(shift), y_rot, out["y"])
+    return {"x": out["x"], "y": y}
+
+
+def hetero_batches(task, batch: int, *, mode: str, alpha=0.0, shift=0.0,
+                   seed: int = 0, m: int, n_classes: Optional[int] = None,
+                   flip_mask=None) -> Iterator[dict]:
+    """Python-iterator twin of the engine's in-scan hetero ``batch_fn``
+    (the legacy ``Trainer`` path) — same key schedule, same selection,
+    bit-identical batches.  ``flip_mask`` applies the label-flip data
+    attack to the marked workers' shards, as in ``teacher_batches``."""
+    n_classes = task.n_classes if n_classes is None else n_classes
+    weights = None
+    if mode == "dirichlet":
+        weights = worker_mixtures(mixture_key(seed), alpha, m, n_classes)
+    step = 0
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0xDA7A), step)
+        out = hetero_worker_batch(task, key, batch, m, mode=mode,
+                                  weights=weights, alpha=alpha, shift=shift)
+        if flip_mask is not None:
+            flipped = flip_labels(out["y"], n_classes)
+            sel = flip_mask.reshape((m, 1))
+            out = {"x": out["x"], "y": jnp.where(sel, flipped, out["y"])}
+        step += 1
+        yield out
+
+
+def zeta_sq(grads, mask: jax.Array) -> jax.Array:
+    """Measured inter-worker dissimilarity ``zeta^2 = E_{i in mask}
+    ||g_i - g_bar_mask||^2`` — the bounded-heterogeneity constant of the
+    non-IID assumption (Data & Diggavi 2020; Karimireddy et al. 2022)
+    estimated from this step's stacked gradients.  O(m d), no Gram, no
+    flattening (model-axis sharding of large leaves survives)."""
+    return tu.tree_dissimilarity(grads, mask)

@@ -6,7 +6,8 @@ synthetic streams with the structure the training loop expects:
   * ``lm_batches``   — token streams for LM training; tokens are drawn from
     a Zipf-like unigram distribution with a deterministic per-(step,
     worker) seed, so every honest worker sees i.i.d. data from the same
-    distribution (the paper's Assumption 2.1);
+    distribution (the paper's Assumption 2.1 — relaxed by the non-IID
+    worker models of ``repro.data.hetero``, DESIGN.md §13);
   * ``stub_batches`` — (embeddings, labels) streams for the stub-frontend
     archs (VLM / audio);
   * ``worker_split`` — reshape a global batch into per-worker slices
@@ -47,25 +48,46 @@ def _zipf_logits(vocab: int, alpha: float = 1.1):
 
 def lm_batches(vocab: int, batch: int, seq_len: int, *, seed: int = 0,
                m: Optional[int] = None, flip_mask=None,
-               alpha: float = 1.1) -> Iterator[dict]:
+               alpha: float = 1.1,
+               hetero_alpha: float = 0.0) -> Iterator[dict]:
     """Infinite iterator of {"tokens": (B, L)} (or (m, B/m, L) when ``m``).
 
     ``flip_mask`` (m,) marks workers whose *labels* are corrupted; for LM
     training the label is the next token, so flipping remaps the worker's
     token stream through the label-flip involution.
+
+    ``hetero_alpha`` (> 0, finite; needs ``m``) activates the Dirichlet
+    worker-heterogeneity model of ``repro.data.hetero`` on the token
+    stream: worker ``i``'s unigram distribution is the shared Zipf law
+    reweighted by a per-worker mixture ``pi_i ~ Dirichlet(alpha * 1)``
+    over the vocabulary — the LM analogue of label skew (DESIGN.md §13).
     """
     logits = _zipf_logits(vocab, alpha)
+    hetero_on = (m is not None and 0.0 < hetero_alpha < np.inf)
+    if hetero_on:
+        if batch % m:
+            raise ValueError(f"batch {batch} not divisible by m={m}")
+        from repro.data.hetero import mixture_key, worker_mixtures
+        w = worker_mixtures(mixture_key(seed), hetero_alpha, m, vocab)
+        wlogits = logits[None, :] + jnp.log(jnp.maximum(w, 1e-30))
     step = 0
     while True:
         key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
-        toks = jax.random.categorical(key, logits, shape=(batch, seq_len))
-        out = {"tokens": toks.astype(jnp.int32)}
-        if m is not None:
-            out = worker_split(out, m)
-            if flip_mask is not None:
-                flipped = flip_labels(out["tokens"], vocab)
-                sel = flip_mask.reshape((m,) + (1,) * (toks.ndim))
-                out = {"tokens": jnp.where(sel, flipped, out["tokens"])}
+        if hetero_on:
+            toks = jax.random.categorical(
+                key, wlogits[:, None, None, :],
+                shape=(m, batch // m, seq_len))
+            out = {"tokens": toks.astype(jnp.int32)}
+        else:
+            toks = jax.random.categorical(key, logits,
+                                          shape=(batch, seq_len))
+            out = {"tokens": toks.astype(jnp.int32)}
+            if m is not None:
+                out = worker_split(out, m)
+        if m is not None and flip_mask is not None:
+            flipped = flip_labels(out["tokens"], vocab)
+            sel = flip_mask.reshape((m, 1, 1))
+            out = {"tokens": jnp.where(sel, flipped, out["tokens"])}
         step += 1
         yield out
 

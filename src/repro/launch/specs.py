@@ -93,7 +93,11 @@ def build_train(cfg: ModelConfig, shape: InputShape, mesh, *,
             mesh, sh.flat_acc_pspec(mesh, layout.d_padded))
     step = tr.make_train_step(loss, opt, byz_mask=jnp.zeros((m,), bool),
                               defense=defense, spmd_axis_name=spmd,
-                              acc_sharding=acc_sharding, jit=False)
+                              acc_sharding=acc_sharding,
+                              # the zeta trace layer (DESIGN.md §13) is
+                              # campaign telemetry; keep the at-scale hot
+                              # path free of its two O(m d) passes
+                              trace_zeta=False, jit=False)
 
     # ---- abstract state with shardings --------------------------------
     params_a = T.init_abstract(cfg)

@@ -66,6 +66,9 @@ def main():
     ap.add_argument("--t1", type=int, default=200)
     ap.add_argument("--floor", type=float, default=1.0)
     ap.add_argument("--reset-period", type=int, default=0)
+    ap.add_argument("--hetero-alpha", type=float, default=0.0,
+                    help="Dirichlet worker heterogeneity on the token "
+                         "stream (0 = IID, DESIGN.md §13); LM archs only")
     ap.add_argument("--sketch", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=25)
@@ -94,12 +97,17 @@ def main():
 
     flip = byz_mask if attack.data_attack else None
     if cfg.embed_stub:
+        if args.hetero_alpha > 0:
+            raise SystemExit("--hetero-alpha models token streams; "
+                             "stub-frontend archs have no token unigram "
+                             "to skew")
         it = data_lib.stub_batches(cfg.d_model, cfg.vocab_size, args.batch,
                                    args.seq, seed=args.seed, m=m,
                                    flip_mask=flip)
     else:
         it = data_lib.lm_batches(cfg.vocab_size, args.batch, args.seq,
-                                 seed=args.seed, m=m, flip_mask=flip)
+                                 seed=args.seed, m=m, flip_mask=flip,
+                                 hetero_alpha=args.hetero_alpha)
     held = None
     if defense.needs_held_batch:
         if cfg.embed_stub:

@@ -46,6 +46,7 @@ from repro.core import attacks as atk_lib
 from repro.core import defenses as dfn_lib
 from repro.core import safeguard as sg
 from repro.core import tree_utils as tu
+from repro.data import hetero as het_lib
 from repro.optim import OptimizerBundle
 
 f32 = jnp.float32
@@ -135,7 +136,8 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
                     attack: Optional[atk_lib.Attack] = None,
                     zeno_eta: float = 0.1, zeno_rho: float = 5e-4,
                     spmd_axis_name=None, acc_sharding=None,
-                    sg_acc_sharding=None, jit: bool = True):
+                    sg_acc_sharding=None, trace_zeta: bool = True,
+                    jit: bool = True):
     """Build the jitted training step.
 
     The defense is one :class:`core.defenses.Defense` (``defense=``);
@@ -188,12 +190,27 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
                                         rho=zeno_rho)
         agg, defense_state, info = defense.aggregate(state.defense_state,
                                                      grads, ctx)
+        # dissimilarity-aware trace layer (DESIGN.md §13): the measured
+        # zeta^2 heterogeneity of the reported gradients — over the
+        # simulation's ground-truth honest set and over the defense's
+        # live good set (what a real master could compute).  Two O(m d)
+        # passes; ``trace_zeta=False`` drops them from the hot path
+        # (the at-scale lowering of launch/specs does)
+        if trace_zeta:
+            metrics["zeta_sq"] = het_lib.zeta_sq(grads, ~byz_mask)
+            metrics["zeta_good_sq"] = het_lib.zeta_sq(grads, info["good"])
         if defense.stateful:
             metrics["n_good"] = info["n_good"]
             metrics["caught_byz"] = (byz_mask & ~info["good"]).sum()
             metrics["evicted_honest"] = (~byz_mask & ~info["good"]).sum()
             if "restored" in info:
                 metrics["restored"] = info["restored"].sum()
+        # per-worker detection statistics, traced when the defense
+        # publishes them (Fig-2a reads these from the engine's traces
+        # instead of re-implementing the training loop)
+        for k in ("dist_to_med_B", "dist_to_med_A"):
+            if k in info:
+                metrics[k] = jnp.asarray(info[k], jnp.float32)
         feedback = atk_lib.defense_feedback(info, m)
 
         # feedback coupling (DESIGN.md §11): adaptive attacks fold this
@@ -274,7 +291,10 @@ class Trainer:
             else:
                 self.state, metrics = self.step_fn(self.state, batch)
             if (i + 1) % self.log_every == 0 or i == steps - 1:
-                rec = {k: float(v) for k, v in metrics.items()}
+                # scalars only: vector metrics (per-worker detection
+                # statistics) are trace material, not log lines
+                rec = {k: float(v) for k, v in metrics.items()
+                       if getattr(v, "ndim", 0) == 0}
                 rec["step"] = int(self.state.step)
                 if self.eval_fn is not None:
                     rec.update(self.eval_fn(self.state.params))

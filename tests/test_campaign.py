@@ -174,6 +174,35 @@ def test_engine_matches_trainer_path_zoo():
             assert eng["evicted_honest"] == loop["evicted_honest"]
 
 
+def test_engine_matches_trainer_path_hetero_and_bucketing():
+    """Acceptance: engine-vs-Trainer bit-identity holds for the hetero
+    batch_fns (Dirichlet label skew, teacher-rotation shift — the
+    iterator in repro.data.hetero shares the engine's key schedule and
+    selection) and for bucketing-wrapped defenses (the permutation
+    stream comes from the same scan-threaded rng on both paths)."""
+    task = tasks.make_teacher_task()
+    for attack, defense, hk in [
+            ("none", "bucketing_krum", {}),
+            ("variance", "bucketing_cclip", {}),
+            ("none", "krum", dict(hetero="dirichlet", hetero_alpha=0.1)),
+            ("variance", "safeguard_double",
+             dict(hetero="dirichlet", hetero_alpha=0.1)),
+            ("sign_flip", "mean", dict(hetero="shift", hetero_shift=1.0)),
+            ("label_flip", "centered_clip",
+             dict(hetero="dirichlet", hetero_alpha=0.3))]:
+        scn = common.scenario_for(attack, defense, steps=STEPS, task=task,
+                                  **hk)
+        eng = engine.run_scenarios([scn])[scenario_id(scn)]
+        loop = common.run_experiment_loop(task, attack, defense,
+                                          steps=STEPS, **hk)
+        assert eng["acc"] == pytest.approx(loop["acc"], abs=1e-12), \
+            (attack, defense, hk)
+        if "caught_byz" in loop:
+            assert eng["caught_byz"] == loop["caught_byz"], (attack,
+                                                             defense)
+            assert eng["evicted_honest"] == loop["evicted_honest"]
+
+
 def test_stateful_attacks_vmap_bitexact():
     """Satellite: delayed/burst attack-state pytrees batch correctly over
     the seed axis — vmapped lanes match the unbatched trajectory

@@ -50,8 +50,11 @@ def test_registry_contract(grads):
                         "centered_clip", "norm_filter", "dnc",
                         "safeguard_cclip"}
     for name, d in reg.items():
-        ctx = ({"scores": jnp.arange(M, dtype=jnp.float32)}
-               if d.needs_held_batch else {})
+        # the trainer's ctx always carries the step rng (bucketing's
+        # permutation draws from it)
+        ctx = {"rng": jax.random.PRNGKey(11)}
+        if d.needs_held_batch:
+            ctx["scores"] = jnp.arange(M, dtype=jnp.float32)
         agg, state, info = run_defense(d, grads, ctx)
         assert agg["a"].shape == (7, 4), name
         assert bool(jnp.isfinite(agg["a"]).all()), name
@@ -136,7 +139,8 @@ def test_trim_derivation_single_source():
         np.testing.assert_array_equal(
             np.asarray(got["w"]),
             np.asarray(agg_lib.trimmed_mean(g, trim=want)["w"]))
-    assert dfn.static_nbyz_names() == {"trimmed_mean", "krum", "zeno"}
+    assert dfn.static_nbyz_names() == {"trimmed_mean", "krum", "zeno",
+                                       "bucketing_krum"}
 
 
 # ------------------------------------------------------------- weiszfeld
@@ -335,3 +339,103 @@ def test_defense_feedback_projection(grads):
     fb_sg = atk_lib.defense_feedback(info_sg, M)
     assert float(fb_sg["threshold_B"] if "threshold_B" in fb_sg else
                  fb_sg["threshold"]) < atk_lib.OPEN_LOOP_THRESHOLD
+
+
+# ------------------------------------------------------------- bucketing
+
+
+def test_bucketing_registry_and_factory_validation():
+    reg = dfn.make_registry(M, NBYZ)
+    assert "bucketing_krum" in reg and "bucketing_cclip" in reg
+    assert reg["bucketing_krum"].static_nbyz      # inner krum slices on b
+    assert not reg["bucketing_cclip"].static_nbyz
+    with pytest.raises(ValueError, match="not divisible"):
+        dfn.make_bucketing(reg["mean"], M, 3)
+    with pytest.raises(ValueError, match="held-batch"):
+        dfn.make_bucketing(reg["zeno"], M, 2)
+    # a traced n_byz keeps the name resolvable but refuses aggregation
+    traced = dfn.make_registry(M, jnp.asarray(NBYZ))["bucketing_krum"]
+    with pytest.raises(ValueError, match="statically"):
+        traced.aggregate(None, {"a": jnp.zeros((M, 2))},
+                         {"rng": jax.random.PRNGKey(0)})
+
+
+def test_bucketing_needs_step_rng(grads):
+    d = dfn.make_registry(M, NBYZ)["bucketing_krum"]
+    with pytest.raises(ValueError, match="rng"):
+        run_defense(d, grads, ctx={})
+
+
+def test_derive_bucket_nbyz():
+    # ceil(b/s) corrupt buckets — never capped
+    assert dfn.derive_bucket_nbyz(4, 2) == 2
+    assert dfn.derive_bucket_nbyz(3, 2) == 2
+    assert dfn.derive_bucket_nbyz(0, 2) == 0
+    assert dfn.derive_bucket_nbyz(4, 1) == 4
+    # a combination inner Krum cannot tolerate is OMITTED from the
+    # registry (like the sketched safeguard_cclip), never run with a
+    # silently understated budget
+    reg = dfn.make_registry(6, 4)       # 3 buckets, ceil(4/2)=2 > 0
+    assert "bucketing_krum" not in reg
+    assert "bucketing_cclip" in reg     # clipping has no budget bound
+
+
+def test_bucketing_mean_is_permutation_invariant_mean(rng):
+    """Bucket means of a permutation, averaged by an inner mean, is the
+    global mean — the meta-defense is exact on the trivial inner rule."""
+    g = {"a": jax.random.normal(rng, (M, 5))}
+    inner = dfn.make_registry(M // 2, 0)["mean"]
+    d = dfn.make_bucketing(inner, M, 2)
+    agg, _, info = run_defense(d, g, ctx={"rng": jax.random.PRNGKey(3)})
+    np.testing.assert_allclose(np.asarray(agg["a"]),
+                               np.asarray(g["a"]).mean(axis=0),
+                               rtol=1e-5, atol=1e-6)
+    assert info["n_good"] == M and bool(info["good"].all())
+
+
+def test_bucketing_maps_bucket_decisions_to_workers():
+    """A bucket rejected by a *filtering* inner rule marks exactly its s
+    workers not-good on the (m,) surface the trainer/attacks observe."""
+    s = 2
+    inner = dfn.make_norm_filter(M // s, mult=2.0)
+    d = dfn.make_bucketing(inner, M, s)
+    # one wildly deviating worker: whatever bucket the permutation puts
+    # it in has a huge mean norm and fails the inner norm filter
+    g = {"a": jnp.ones((M, 6)).at[0].set(1e6)}
+    state = d.init_state(params_like(g))
+    _, state, _ = d.aggregate(state, g, {"rng": jax.random.PRNGKey(5)})
+    _, _, info = d.aggregate(state, g, {"rng": jax.random.PRNGKey(6)})
+    good = np.asarray(info["good"])
+    assert good.shape == (M,)
+    assert good.sum() == M - s                    # exactly one bucket lost
+    assert not good[0]                            # ... the deviator's
+    assert float(info["n_good"]) == M - s
+    assert np.asarray(info["bucket_good"]).shape == (M // s,)
+    assert np.asarray(info["bucket_good"]).sum() == M // s - 1
+
+
+def test_bucketing_cclip_state_is_bucket_shaped(rng):
+    d = dfn.make_registry(M, NBYZ)["bucketing_cclip"]
+    g = {"a": jax.random.normal(rng, (M, 9))}
+    state = d.init_state(params_like(g))
+    assert state["momentum"].shape[0] == M // 2
+    agg, state2, info = run_defense(d, g,
+                                    ctx={"rng": jax.random.PRNGKey(7)})
+    assert state2["momentum"].shape == state["momentum"].shape
+    assert info["n_good"] == M                    # clipping evicts nobody
+
+
+def test_threshold_scale_knob_relaxes_empirical_filter(rng):
+    """The eviction multiplier is a registry knob (vmap axis in the
+    campaign): a tiny scale evicts an outlier the default keeps."""
+    k1, k2 = jax.random.split(rng)
+    g = {"a": jax.random.normal(k1, (M, 8))}
+    g["a"] = g["a"].at[M - 1].add(2.0)            # mild honest outlier
+    def run_scale(scale):
+        d = dfn.make_registry(M, NBYZ, T0=1, T1=1,
+                              threshold_scale=scale)["safeguard_double"]
+        st = d.init_state(params_like(g))
+        for _ in range(3):
+            _, st, info = d.aggregate(st, g, {"rng": k2})
+        return int(np.asarray(info["good"]).sum())
+    assert run_scale(1e-3) < run_scale(1e3)

@@ -1,0 +1,337 @@
+"""Worker-heterogeneity subsystem (DESIGN.md §13): the non-IID data
+models, the zeta dissimilarity trace layer, bucketing as a meta-defense
+in the engine, construction-time grid validation, and the subsystem's
+acceptance separation at strong label skew.
+
+The statistical properties of the Dirichlet partitioner also have
+hypothesis twins in ``tests/test_property.py``; the concrete versions
+here keep the invariants covered when hypothesis is unavailable.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.campaign import engine
+from repro.campaign.scenario import (HETERO_DEFENSES, Scenario,
+                                     expand_grid, scenario_id)
+from repro.data import hetero as H
+from repro.data import tasks
+from repro.data.pipeline import worker_split
+
+TASK = tasks.make_teacher_task()
+
+
+# ------------------------------------------------------------ data models
+
+
+def test_dirichlet_exact_shapes_and_support():
+    key = jax.random.fold_in(jax.random.PRNGKey(0 ^ 0xDA7A), 3)
+    w = H.worker_mixtures(H.mixture_key(0), 0.05, 10, 10)
+    assert w.shape == (10, 10)
+    np.testing.assert_allclose(np.asarray(w.sum(axis=1)), 1.0, atol=1e-5)
+    out = H.hetero_worker_batch(TASK, key, 100, 10, mode="dirichlet",
+                                weights=w, alpha=0.05)
+    assert out["x"].shape == (10, 10, TASK.d_in)
+    assert out["y"].shape == (10, 10) and out["y"].dtype == jnp.int32
+
+
+def test_dirichlet_strong_skew_concentrates_labels():
+    """At alpha = 0.05 a worker's shard is dominated by very few classes
+    — the non-IID regime the subsystem exists to express."""
+    key = jax.random.fold_in(jax.random.PRNGKey(0 ^ 0xDA7A), 0)
+    w = H.worker_mixtures(H.mixture_key(0), 0.05, 10, 10)
+    out = H.hetero_worker_batch(TASK, key, 400, 10, mode="dirichlet",
+                                weights=w, alpha=0.05)
+    y = np.asarray(out["y"])
+    top_frac = [np.bincount(y[i], minlength=10).max() / y.shape[1]
+                for i in range(10)]
+    assert np.mean(top_frac) > 0.6
+    # ... while the IID split stays spread out
+    iid = worker_split(tasks.teacher_batch(TASK, key, 400), 10)
+    y0 = np.asarray(iid["y"])
+    iid_frac = [np.bincount(y0[i], minlength=10).max() / y0.shape[1]
+                for i in range(10)]
+    assert np.mean(top_frac) > np.mean(iid_frac) + 0.2
+
+
+def test_dirichlet_inactive_alpha_is_iid_bitexact():
+    """alpha -> inf (the Dirichlet limit) and alpha <= 0 (the off
+    sentinel) both reproduce the contiguous IID split bit-for-bit."""
+    key = jax.random.fold_in(jax.random.PRNGKey(7 ^ 0xDA7A), 11)
+    iid = worker_split(tasks.teacher_batch(TASK, key, 100), 10)
+    for alpha in (float("inf"), 0.0, -1.0):
+        w = H.worker_mixtures(H.mixture_key(7), alpha, 10, 10)
+        got = H.hetero_worker_batch(TASK, key, 100, 10, mode="dirichlet",
+                                    weights=w, alpha=alpha)
+        assert np.array_equal(np.asarray(got["x"]), np.asarray(iid["x"]))
+        assert np.array_equal(np.asarray(got["y"]), np.asarray(iid["y"]))
+
+
+def test_one_hot_mixture_gives_pure_class_shards():
+    labels = jnp.concatenate([jnp.arange(6),
+                              jax.random.randint(jax.random.PRNGKey(2),
+                                                 (18,), 0, 6)])
+    idx = H.dirichlet_indices(jax.random.PRNGKey(2), labels,
+                              jnp.eye(6, dtype=jnp.float32), 6, 4)
+    picked = np.asarray(labels)[np.asarray(idx)]
+    np.testing.assert_array_equal(picked,
+                                  np.arange(6)[:, None] * np.ones((1, 4),
+                                                                  int))
+
+
+def test_shift_model_rotates_labels_not_inputs():
+    key = jax.random.fold_in(jax.random.PRNGKey(0 ^ 0xDA7A), 5)
+    iid = worker_split(tasks.teacher_batch(TASK, key, 100), 10)
+    out = H.hetero_worker_batch(TASK, key, 100, 10, mode="shift",
+                                shift=1.5)
+    # concept shift: P(y | x) changes, the inputs do not
+    assert np.array_equal(np.asarray(out["x"]), np.asarray(iid["x"]))
+    frac = float((out["y"] != iid["y"]).mean())
+    assert 0.1 < frac < 0.9
+    # shift = 0 is bit-for-bit IID
+    off = H.hetero_worker_batch(TASK, key, 100, 10, mode="shift",
+                                shift=0.0)
+    assert np.array_equal(np.asarray(off["y"]), np.asarray(iid["y"]))
+    # angles are spread symmetrically over [-shift, +shift]
+    ang = np.asarray(H.shift_angles(1.5, 10))
+    assert ang[0] == pytest.approx(-1.5) and ang[-1] == pytest.approx(1.5)
+
+
+def test_rotate_pairs_is_norm_preserving_and_invertible():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 6))
+    r = H.rotate_pairs(x, jnp.asarray(0.7))
+    np.testing.assert_allclose(np.asarray((r * r).sum(-1)),
+                               np.asarray((x * x).sum(-1)), rtol=1e-5)
+    back = H.rotate_pairs(r, jnp.asarray(-0.7))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-5)
+    # odd trailing coordinate passes through
+    x5 = jax.random.normal(jax.random.PRNGKey(1), (3, 5))
+    r5 = H.rotate_pairs(x5, jnp.asarray(1.1))
+    np.testing.assert_array_equal(np.asarray(r5[..., 4]),
+                                  np.asarray(x5[..., 4]))
+
+
+def test_hetero_batches_iterator_matches_engine_key_schedule():
+    """The legacy-Trainer iterator and a hand-built engine-style batch_fn
+    produce identical streams (the bit-identity substrate)."""
+    it = H.hetero_batches(TASK, 60, mode="dirichlet", alpha=0.2, seed=3,
+                          m=6)
+    w = H.worker_mixtures(H.mixture_key(3), 0.2, 6, TASK.n_classes)
+    for t in range(3):
+        a = next(it)
+        key = jax.random.fold_in(jax.random.PRNGKey(3 ^ 0xDA7A), t)
+        b = H.hetero_worker_batch(TASK, key, 60, 6, mode="dirichlet",
+                                  weights=w, alpha=0.2)
+        assert np.array_equal(np.asarray(a["x"]), np.asarray(b["x"]))
+        assert np.array_equal(np.asarray(a["y"]), np.asarray(b["y"]))
+
+
+def test_unknown_hetero_mode_fails_loudly():
+    with pytest.raises(ValueError, match="unknown hetero model"):
+        H.hetero_worker_batch(TASK, jax.random.PRNGKey(0), 10, 2,
+                              mode="nope")
+
+
+# ------------------------------------------------- grid-time validation
+
+
+def test_batch_divisibility_validated_at_scenario_construction():
+    """Satellite: the bad axis fails at grid construction with the
+    scenario named — not as a reshape error from inside a traced scan."""
+    with pytest.raises(ValueError, match=r"variance/mean.*batch=101"):
+        Scenario(attack="variance", defense="mean", batch=101)
+    with pytest.raises(ValueError, match="not divisible"):
+        expand_grid(attack=["variance"], defense=["mean"], batch=[90, 101])
+    # the boundary cases still construct
+    Scenario(attack="variance", defense="mean", batch=100, m=10)
+    Scenario(attack="variance", defense="mean", batch=10, m=10)
+
+
+def test_bucketing_shape_validated_at_scenario_construction():
+    with pytest.raises(ValueError, match="bucket_s"):
+        Scenario(attack="none", defense="bucketing_krum", m=10, bucket_s=3)
+    with pytest.raises(ValueError, match="unknown hetero model"):
+        Scenario(attack="none", defense="mean", hetero="zipf")
+    Scenario(attack="none", defense="bucketing_krum", m=10, bucket_s=2)
+
+
+def test_scenario_id_unorphaned_by_hetero_and_bucket_fields():
+    """Satellite: the new defaulted knobs are excluded from the content
+    hash, so every previously stored campaign cell keeps its key; a
+    non-default hetero knob re-keys exactly the cells it changes."""
+    import hashlib
+    import json
+    s = Scenario(attack="a", defense="d", steps=99)
+    expect = hashlib.sha256(json.dumps(
+        {"attack": "a", "defense": "d", "steps": 99},
+        sort_keys=True).encode()).hexdigest()[:16]
+    assert scenario_id(s) == expect               # pre-PR key, unchanged
+    ids = {scenario_id(x) for x in (
+        s,
+        dataclasses.replace(s, hetero="dirichlet", hetero_alpha=0.1),
+        dataclasses.replace(s, hetero="dirichlet", hetero_alpha=0.05),
+        dataclasses.replace(s, hetero="shift", hetero_shift=1.0),
+        dataclasses.replace(s, threshold_scale=2.0),
+    )}
+    assert len(ids) == 5
+    # bucket_s at its default stays out of the hash for bucketing cells
+    b = Scenario(attack="a", defense="bucketing_krum")
+    assert scenario_id(b) == scenario_id(
+        dataclasses.replace(b, bucket_s=2))
+    assert scenario_id(b) != scenario_id(
+        dataclasses.replace(b, bucket_s=1))
+
+
+# ----------------------------------------------------- engine integration
+
+
+STEPS = 30
+
+
+def test_hetero_knobs_are_vmap_axes():
+    """hetero_alpha feeds only fixed-shape sampling arithmetic, so all
+    alpha variants (including the inf IID sentinel) run as lanes of one
+    program — and the traced knob changes the outcome."""
+    scns = [Scenario(attack="variance", defense="safeguard_double",
+                     steps=STEPS, hetero="dirichlet", hetero_alpha=a)
+            for a in (0.05, 10.0, float("inf"))]
+    assert len(engine.group_scenarios(scns)) == 1
+    res = engine.run_scenarios(scns)
+    lo, hi, inf = (res[scenario_id(s)] for s in scns)
+    assert not np.array_equal(lo["traces"]["loss"], hi["traces"]["loss"])
+    # the inf lane is bit-identical to the separately traced IID program
+    iid = Scenario(attack="variance", defense="safeguard_double",
+                   steps=STEPS)
+    r_iid = engine.run_scenarios([iid])[scenario_id(iid)]
+    assert inf["acc"] == r_iid["acc"]
+    assert np.array_equal(inf["traces"]["loss"], r_iid["traces"]["loss"])
+
+    scns = [Scenario(attack="none", defense="mean", steps=STEPS,
+                     hetero="shift", hetero_shift=sh)
+            for sh in (0.3, 1.5)]
+    assert len(engine.group_scenarios(scns)) == 1
+    res = engine.run_scenarios(scns)
+    a, b = (res[scenario_id(s)] for s in scns)
+    assert not np.array_equal(a["traces"]["loss"], b["traces"]["loss"])
+
+
+def test_hetero_vmap_matches_unbatched_bitexact():
+    """Acceptance: vmapped-vs-unbatched equivalence over a hetero_alpha
+    axis (gamma/Gumbel sampling batches bit-stably)."""
+    scns = [Scenario(attack="variance", defense="safeguard_double",
+                     steps=STEPS, hetero="dirichlet", hetero_alpha=a,
+                     seed=k)
+            for a in (0.05, 1.0) for k in (0, 1)]
+    assert len(engine.group_scenarios(scns)) == 1
+    batched = engine.run_scenarios(scns, batched=True)
+    unbatched = engine.run_scenarios(scns, batched=False)
+    for s in scns:
+        b, u = batched[scenario_id(s)], unbatched[scenario_id(s)]
+        for key in b["traces"]:
+            assert np.array_equal(b["traces"][key], u["traces"][key]), \
+                (s.hetero_alpha, s.seed, key)
+        assert np.array_equal(b["final_good"], u["final_good"])
+        assert b["acc"] == u["acc"]
+
+
+def test_zeta_traces_measure_heterogeneity():
+    """The dissimilarity trace layer: zeta_sq is recorded every step and
+    grows with label skew."""
+    scns = [Scenario(attack="none", defense="mean", steps=STEPS,
+                     hetero="dirichlet", hetero_alpha=a)
+            for a in (0.05, float("inf"))]
+    res = engine.run_scenarios(scns)
+    skew, iid = (res[scenario_id(s)] for s in scns)
+    for rec in (skew, iid):
+        for key in ("zeta_sq", "zeta_good_sq"):
+            assert rec["traces"][key].shape == (STEPS,)
+            assert (rec["traces"][key] > 0).all()
+    assert skew["zeta_sq_mean"] > 1.3 * iid["zeta_sq_mean"]
+    # with no filtering defense the defense-view zeta includes the
+    # (honest-acting) byzantine rows: equal masks -> equal estimates on
+    # the all-good steps
+    assert skew["traces"]["zeta_good_sq"].shape == (STEPS,)
+
+
+def test_bucketing_defenses_in_engine_vmap_bitexact():
+    """The meta-defense's permutation stream (scan-threaded rng) and the
+    inner state batch correctly over seeds."""
+    for defense in ("bucketing_krum", "bucketing_cclip"):
+        scns = [Scenario(attack="variance", defense=defense, steps=STEPS,
+                         seed=k) for k in (0, 1)]
+        assert len(engine.group_scenarios(scns)) == 1
+        batched = engine.run_scenarios(scns, batched=True)
+        unbatched = engine.run_scenarios(scns, batched=False)
+        for s in scns:
+            b, u = batched[scenario_id(s)], unbatched[scenario_id(s)]
+            for key in b["traces"]:
+                assert np.array_equal(b["traces"][key],
+                                      u["traces"][key]), (defense, key)
+            assert b["acc"] == u["acc"], defense
+
+
+def test_bucket_s_is_program_structure():
+    """Different bucket counts change the traced shapes, so bucket_s
+    partitions batch groups (like static n_byz), and the engine passes
+    it through to the registry; a bucket count too small for the inner
+    rule fails at construction, not mid-trace."""
+    scns = [Scenario(attack="none", defense="bucketing_krum", steps=8,
+                     bucket_s=s) for s in (1, 2)]
+    assert len(engine.group_scenarios(scns)) == 2
+    res = engine.run_scenarios(scns)
+    a, b = (res[scenario_id(s)] for s in scns)
+    assert not np.array_equal(a["traces"]["loss"], b["traces"]["loss"])
+    with pytest.raises(ValueError, match="buckets"):
+        Scenario(attack="none", defense="bucketing_krum", bucket_s=5)
+
+
+# ------------------------------------------------ acceptance: separation
+
+
+def test_separation_at_strong_skew():
+    """Acceptance (ISSUE 5): at strong skew (alpha = 0.1, no attack)
+    krum and trimmed_mean lose measurable accuracy vs mean, while
+    bucketing(krum) and centered_clip recover it, and SafeguardSGD (at
+    the zeta-relaxed eviction scale) evicts no honest worker; traces
+    record measured zeta per step."""
+    seeds = (0, 1)
+    alpha = 0.1
+
+    def cells(defense, **kw):
+        return [Scenario(attack="none", defense=defense, steps=150,
+                         seed=k, hetero="dirichlet", hetero_alpha=alpha,
+                         **kw) for k in seeds]
+
+    grid = {d: cells(d) for d in ("mean", "krum", "trimmed_mean",
+                                  "centered_clip", "bucketing_krum")}
+    grid["safeguard_double"] = cells("safeguard_double",
+                                     threshold_scale=2.0)
+    res = engine.run_scenarios([s for ss in grid.values() for s in ss])
+
+    def acc(d):
+        return float(np.mean([res[scenario_id(s)]["acc"]
+                              for s in grid[d]]))
+
+    a_mean, a_krum, a_trim = acc("mean"), acc("krum"), acc("trimmed_mean")
+    a_cc, a_bucket = acc("centered_clip"), acc("bucketing_krum")
+    a_sg = acc("safeguard_double")
+    # selection-style rules lock onto single skewed shards and lose
+    assert a_krum < a_mean - 0.10, (a_krum, a_mean)
+    assert a_trim < a_mean - 0.04, (a_trim, a_mean)
+    # bucketing repairs krum; bounded-influence clipping tracks mean
+    assert a_bucket > a_krum + 0.08, (a_bucket, a_krum)
+    assert a_cc > a_mean - 0.06, (a_cc, a_mean)
+    assert a_sg > a_mean - 0.08, (a_sg, a_mean)
+    # the zeta-relaxed safeguard evicts nobody (everyone is honest here)
+    for s in grid["safeguard_double"]:
+        assert res[scenario_id(s)]["caught_byz"] == 0, s.seed
+        assert res[scenario_id(s)]["evicted_honest"] == 0, s.seed
+    # measured zeta is traced for every cell of the campaign
+    for ss in grid.values():
+        for s in ss:
+            tr = res[scenario_id(s)]["traces"]["zeta_sq"]
+            assert tr.shape == (150,) and (tr > 0).all()

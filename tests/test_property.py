@@ -308,3 +308,95 @@ def test_variance_attack_within_population_variance(m_half, seed):
     mu, sd = gw.mean(0), gw.std(0) + 1e-9
     adv = np.asarray(out["w"])[0]
     assert (np.abs(adv - mu) <= 3.0 * sd + 1e-5).all()
+
+
+# ---------------------------------------------------- hetero partitioner
+
+
+@given(st.integers(1, 4), st.integers(1, 8), st.integers(0, 1000),
+       st.floats(0.01, 50.0, allow_nan=False))
+@settings(**SET)
+def test_dirichlet_partitioner_exact_shapes(mm, per, seed, alpha):
+    """Satellite (DESIGN.md §13): every worker shard has exactly B/m
+    examples — sampling is with replacement against static quotas, so
+    shapes never depend on how skewed the mixture is."""
+    from repro.data import hetero as H
+    m = 2 * mm                       # even m, s=2-compatible
+    B = m * per
+    key = jax.random.PRNGKey(seed)
+    w = H.worker_mixtures(H.mixture_key(seed), alpha, m, 10)
+    assert w.shape == (m, 10)
+    np.testing.assert_allclose(np.asarray(w.sum(axis=1)), 1.0, atol=1e-5)
+    labels = jax.random.randint(key, (B,), 0, 10)
+    idx = H.dirichlet_indices(key, labels, w, m, per)
+    assert idx.shape == (m, per) and idx.dtype == jnp.int32
+    assert bool(((idx >= 0) & (idx < B)).all())
+
+
+@given(st.integers(0, 1000), st.floats(0.05, 50.0, allow_nan=False),
+       st.integers(2, 10))
+@settings(deadline=None, max_examples=10)
+def test_dirichlet_mixtures_preserve_global_marginal(seed, alpha, C):
+    """E[pi_i] is uniform for the symmetric Dirichlet, so averaging the
+    selection reweighting over workers preserves the pool's label
+    marginal in expectation."""
+    from repro.data import hetero as H
+    w = H.worker_mixtures(H.mixture_key(seed), alpha, 800, C)
+    np.testing.assert_allclose(np.asarray(w).mean(axis=0), 1.0 / C,
+                               atol=0.08)
+
+
+@given(st.integers(0, 200), st.integers(1, 5))
+@settings(deadline=None, max_examples=10)
+def test_dirichlet_one_hot_mixture_gives_pure_class_shards(seed, per):
+    """A worker whose mixture is a one-hot on class c receives only
+    class-c examples (whenever the pool contains that class)."""
+    from repro.data import hetero as H
+    C = 6
+    key = jax.random.PRNGKey(seed)
+    labels = jnp.concatenate([jnp.arange(C),                # all present
+                              jax.random.randint(key, (3 * C,), 0, C)])
+    w = jnp.eye(C, dtype=jnp.float32)                       # worker i = class i
+    idx = H.dirichlet_indices(key, labels, w, C, per)
+    picked = np.asarray(labels)[np.asarray(idx)]            # (C, per)
+    np.testing.assert_array_equal(picked, np.arange(C)[:, None]
+                                  * np.ones((1, per), int))
+
+
+@given(st.integers(0, 500), st.integers(1, 5), st.integers(1, 4))
+@settings(deadline=None, max_examples=10)
+def test_dirichlet_alpha_inf_recovers_iid_split_bitexact(seed, mm, perm):
+    """alpha -> inf (and alpha <= 0) recover the contiguous IID
+    worker_split bit-for-bit — the sentinel and the Dirichlet limit
+    agree, so IID campaign cells are unchanged by the hetero machinery."""
+    from repro.data import hetero as H
+    from repro.data import tasks
+    from repro.data.pipeline import worker_split
+    m, per = 2 * mm, 2 * perm
+    task = tasks.make_teacher_task(d_in=6, d_hidden=8, n_classes=5)
+    key = jax.random.fold_in(jax.random.PRNGKey(seed ^ 0xDA7A), 0)
+    iid = worker_split(tasks.teacher_batch(task, key, m * per), m)
+    for alpha in (float("inf"), 0.0, -3.0):
+        w = H.worker_mixtures(H.mixture_key(seed), alpha, m, 5)
+        got = H.hetero_worker_batch(task, key, m * per, m,
+                                    mode="dirichlet", weights=w,
+                                    alpha=alpha)
+        assert np.array_equal(np.asarray(got["x"]), np.asarray(iid["x"]))
+        assert np.array_equal(np.asarray(got["y"]), np.asarray(iid["y"]))
+
+
+@given(stacks(m_min=4), st.integers(0, 2 ** 16 - 1))
+@settings(**SET)
+def test_zeta_sq_matches_numpy(arr, mask_bits):
+    """tree_dissimilarity == mean_i||g_i - mean_mask||^2 over the mask."""
+    from repro.data import hetero as H
+    m = arr.shape[0]
+    mask = np.array([(mask_bits >> i) & 1 for i in range(m)], dtype=bool)
+    if not mask.any():
+        mask[0] = True
+    g = {"x": jnp.asarray(arr)}
+    got = float(H.zeta_sq(g, jnp.asarray(mask)))
+    flat = arr.reshape(m, -1).astype(np.float64)
+    center = flat[mask].mean(axis=0)
+    want = float(((flat[mask] - center) ** 2).sum(axis=1).mean())
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
