@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast bench-quick bench-overhead campaign-smoke \
-	adaptive-smoke defense-smoke hetero-smoke lint dryrun-smoke
+	adaptive-smoke defense-smoke hetero-smoke saddle-smoke lint \
+	dryrun-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -41,6 +42,13 @@ defense-smoke:
 hetero-smoke:
 	$(PY) -m repro.campaign.run --campaign hetero --quick --seeds 1
 	$(PY) -m repro.campaign.run --campaign hetero --quick --seeds 1 \
+	    | grep -q "new_cells=0"
+
+# the CI saddle step (DESIGN.md §14): planted-saddle testbed x defense x
+# attack with the second-order trace lane, then assert the store resumes
+saddle-smoke:
+	$(PY) -m repro.campaign.run --campaign saddle --quick --seeds 1
+	$(PY) -m repro.campaign.run --campaign saddle --quick --seeds 1 \
 	    | grep -q "new_cells=0"
 
 lint:

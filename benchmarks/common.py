@@ -20,6 +20,7 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.campaign import engine as campaign_engine
 from repro.campaign.engine import EVAL_BATCH, EVAL_KEY
@@ -30,6 +31,7 @@ from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk_lib
 from repro.core import defenses as dfn_lib
 from repro.data import hetero as het_lib
+from repro.data import saddle as sad_lib
 from repro.data import tasks
 from repro.optim import make_optimizer
 from repro.train import Trainer, init_train_state, make_train_step
@@ -107,14 +109,20 @@ def run_experiment_loop(task, attack_name: str, defense_name: str, *,
                         steps: int = 150, lr: float = 0.1, batch: int = 100,
                         seed: int = 0, reset_period: int = 0,
                         hetero: str = "iid", hetero_alpha: float = 0.0,
-                        hetero_shift: float = 0.0,
+                        hetero_shift: float = 0.0, t0: int = 20,
+                        t1: int = 120, floor: float = 0.1,
+                        burst_start: Optional[int] = None,
+                        burst_length: int = 50,
                         collect=None) -> Dict:
     """Legacy per-trial ``Trainer`` path: one jit, python-loop steps."""
     # steps is forwarded so the burst window derives from the trial length
     # (and an unfireable explicit window fails loudly) — same derivation
     # as the engine path, keeping the two bit-identical
-    attack = atk_lib.make_registry(delay=32, steps=steps)[attack_name]
-    defense = make_defense(defense_name, reset_period=reset_period)
+    attack = atk_lib.make_registry(delay=32, burst_start=burst_start,
+                                   burst_length=burst_length,
+                                   steps=steps)[attack_name]
+    defense = make_defense(defense_name, t0=t0, t1=t1, floor=floor,
+                           reset_period=reset_period)
     opt = make_optimizer(TrainConfig(lr=lr))
     params = tasks.student_init(task, seed=seed + 1)
     state = init_train_state(params, opt, defense=defense, attack=attack,
@@ -153,6 +161,95 @@ def run_experiment_loop(task, attack_name: str, defense_name: str, *,
     out = {"attack": attack_name, "defense": defense_name, "acc": acc,
            "steps": steps, "wall_s": round(wall, 2)}
     good = dfn_lib.final_good(tr.state.defense_state)
+    if good is not None:
+        out["caught_byz"] = int((BYZ & ~good).sum())
+        out["evicted_honest"] = int((~BYZ & ~good).sum())
+    return out
+
+
+def saddle_scenario_for(kind: str, *, steps: int = 120, lr: float = 0.1,
+                        batch: int = 40, seed: int = 0, d: int = 16,
+                        gap: float = 1.0, noise_r: float = 0.05,
+                        vr_period: int = 0,
+                        defense_name: str = "safeguard_double",
+                        attack_name: str = "none", perturb: str = "none",
+                        escape_nu: float = 0.1,
+                        escape_thresh: float = 0.1,
+                        adapt_init: float =
+                        atk_lib.ADAPTIVE_DEFAULTS["adapt_init"]
+                        ) -> Scenario:
+    """The campaign-engine Scenario equivalent of ``run_saddle_loop``'s
+    arguments (same task, knobs, windows, rng scheme)."""
+    return Scenario(task=kind, d_in=d, attack=attack_name,
+                    defense=defense_name, m=M, n_byz=N_BYZ, steps=steps,
+                    seed=seed, lr=lr, batch=batch, saddle_gap=gap,
+                    noise_r=noise_r, vr_period=vr_period, perturb=perturb,
+                    escape_nu=escape_nu, escape_thresh=escape_thresh,
+                    adapt_init=adapt_init)
+
+
+def run_saddle_loop(kind: str, *, steps: int = 120, lr: float = 0.1,
+                    batch: int = 40, seed: int = 0, d: int = 16,
+                    gap: float = 1.0, noise_r: float = 0.05,
+                    vr_period: int = 0,
+                    defense_name: str = "safeguard_double",
+                    attack_name: str = "none", perturb: str = "none",
+                    escape_nu: float = 0.1, escape_thresh: float = 0.1,
+                    adapt_init: float =
+                    atk_lib.ADAPTIVE_DEFAULTS["adapt_init"]) -> Dict:
+    """Legacy per-step ``Trainer``-style path of the planted-saddle
+    testbed (DESIGN.md §14) — the numerics oracle the engine's saddle
+    lane is tested against: same rng streams, same op order, so the
+    trajectories (including the second-order trace lane and the
+    ``saddle_push`` attack state) are bit-identical.  Returns the full
+    per-step metric traces alongside the scalar summary."""
+    stask = sad_lib.make_saddle_task(d, kind)
+    if attack_name == "saddle_push":
+        attack = atk_lib.make_saddle_push(stask.dirs,
+                                          boost_init=adapt_init)
+    else:
+        attack = atk_lib.make_registry(delay=32, steps=steps)[attack_name]
+    defense = make_defense(defense_name)
+    opt = make_optimizer(TrainConfig(lr=lr))
+    loss_fn = sad_lib.make_saddle_loss(stask, gap, noise_r)
+    state = init_train_state(sad_lib.x_init(stask), opt, defense=defense,
+                             attack=attack, seed=seed)
+    step = make_train_step(loss_fn, opt, byz_mask=BYZ, defense=defense,
+                           attack=attack, perturb=perturb,
+                           escape_nu=escape_nu,
+                           escape_thresh=escape_thresh,
+                           so_probe=sad_lib.make_probe(stask, gap))
+    it = sad_lib.saddle_batches(stask, batch, seed=seed, m=M,
+                                vr_period=vr_period)
+
+    held = None
+    if defense.needs_held_batch:
+        def _held():
+            t = 0
+            while True:
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey((seed + 7) ^ 0xDA7A), t)
+                yield {"eps": jax.random.normal(key, (10, d), jnp.float32)}
+                t += 1
+        held = _held()
+
+    t0_wall = time.time()
+    traces: Dict[str, list] = {}
+    for _ in range(steps):
+        b = next(it)
+        if held is not None:
+            state, metrics = step(state, b, next(held))
+        else:
+            state, metrics = step(state, b)
+        for k, v in metrics.items():
+            traces.setdefault(k, []).append(np.asarray(v))
+    stacked = {k: np.stack(v) for k, v in traces.items()}
+
+    out = {"acc": float(sad_lib.escaped(stask, state.params["x"], gap)),
+           "escape_step": sad_lib.first_escape_step(stacked["escaped"]),
+           "traces": stacked,
+           "wall_s": round(time.time() - t0_wall, 2)}
+    good = dfn_lib.final_good(state.defense_state)
     if good is not None:
         out["caught_byz"] = int((BYZ & ~good).sum())
         out["evicted_honest"] = int((~BYZ & ~good).sum())

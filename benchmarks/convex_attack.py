@@ -6,6 +6,12 @@ full honest run).  The attacker behaves honestly, then scales gradients by
 
 Expected: the unwindowed filter fails to evict (or the run diverges),
 while the paper's windowed safeguard catches the burst.
+
+Both variants route through the campaign engine (DESIGN.md §10) as
+Scenario cells — the raw per-step Trainer loop this file used to carry
+lives on as ``common.run_experiment_loop(..., t0/t1/floor/burst_*)``,
+the numerics oracle ``tests/test_campaign.py::
+test_convex_attack_port_matches_legacy_loop`` pins this port against.
 """
 
 from __future__ import annotations
@@ -13,47 +19,40 @@ from __future__ import annotations
 import json
 import os
 
-import jax.numpy as jnp
-
-from repro.data import tasks
-from repro.core import attacks as atk_lib
 from benchmarks import common
+from repro.campaign import engine
+from repro.campaign.scenario import Scenario, scenario_id
+
+STEPS = 200
+BURST_START, BURST_LENGTH = 80, 40
+# name -> (T0, T1, threshold_floor): "windowed" is the paper's sliding
+# windows; "unwindowed" emulates the convex filter — window longer than
+# the run, threshold calibrated so an honest full run would pass
+VARIANTS = {
+    "windowed": (20, 60, 0.1),
+    "unwindowed": (10 ** 6, 10 ** 6, 12.0),
+}
 
 
-def run(steps: int = 200, out_dir: str = "experiments/bench"):
-    task = tasks.make_teacher_task()
-    burst = atk_lib.Attack(
-        "burst", atk_lib.make_burst(start=80, length=40, burst_scale=5.0))
+def variant_scenario(name: str, *, steps: int = STEPS,
+                     seed: int = 0) -> Scenario:
+    t0, t1, floor = VARIANTS[name]
+    return Scenario(attack="burst", defense="safeguard_double", m=common.M,
+                    n_byz=common.N_BYZ, steps=steps, seed=seed, lr=0.1,
+                    batch=100, T0=t0, T1=t1, threshold_floor=floor,
+                    burst_start=BURST_START, burst_length=BURST_LENGTH)
 
-    import repro.core.attacks as atk
+
+def run(steps: int = STEPS, out_dir: str = "experiments/bench"):
+    scns = {name: variant_scenario(name, steps=steps) for name in VARIANTS}
+    res = engine.run_scenarios(list(scns.values()))
     results = {}
-    for name, (t0, t1, floor) in {
-        # windowed (the paper): short windows catch the burst
-        "windowed": (20, 60, 0.1),
-        # unwindowed emulation: window longer than the run, threshold
-        # calibrated so an honest full run would pass (large floor)
-        "unwindowed": (10 ** 6, 10 ** 6, 12.0),
-    }.items():
-        from repro.core import SafeguardConfig
-        from repro.configs.base import TrainConfig
-        from repro.optim import make_optimizer
-        from repro.train import Trainer, init_train_state, make_train_step
-        sg_cfg = SafeguardConfig(m=common.M, T0=t0, T1=t1,
-                                 threshold_floor=floor)
-        opt = make_optimizer(TrainConfig(lr=0.1))
-        params = tasks.student_init(task)
-        state = init_train_state(params, opt, sg_cfg=sg_cfg, attack=burst)
-        step = make_train_step(tasks.mlp_loss, opt, byz_mask=common.BYZ,
-                               sg_cfg=sg_cfg, attack=burst)
-        it = tasks.teacher_batches(task, 100, m=common.M)
-        tr = Trainer(state, step, it, log_every=10 ** 9, name=name)
-        tr.run(steps, verbose=False)
-        import jax
-        eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(10_000), 4000)
-        acc = float(tasks.mlp_accuracy(tr.state.params, eval_b))
-        caught = int((common.BYZ & ~tr.state.sg_state.good).sum())
-        results[name] = {"acc": acc, "caught_byz": caught}
-        print(f"convex_attack,{name},acc={acc:.4f},caught={caught}")
+    for name, s in scns.items():
+        rec = res[scenario_id(s)]
+        results[name] = {"acc": float(rec["acc"]),
+                         "caught_byz": int(rec["caught_byz"])}
+        print(f"convex_attack,{name},acc={results[name]['acc']:.4f},"
+              f"caught={results[name]['caught_byz']}")
 
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "convex_attack.json"), "w") as f:

@@ -7,6 +7,8 @@ measurement (``name,...``) and writes JSON artifacts under
   fig2a           Paper Fig 2(a): detection-statistic growth exponents
   fig2b           Paper Fig 2(b): periodic good-set reset (transients)
   convex_attack   Appendix C.3: burst attack vs unwindowed filter
+  saddle_escape   escape-time distributions on the planted-saddle
+                  testbed vs the theorem's predicted budget
   overhead        master aggregation O(md) cost per defense
   campaign        campaign engine throughput: per-loop Trainer trials vs
                   the scan+vmap engine (BENCH_campaign_throughput.json)
@@ -31,13 +33,16 @@ def main() -> None:
     steps = 60 if args.quick else 150
 
     from benchmarks import (table1_attack_grid, fig2_detection, fig2_reset,
-                            convex_attack, overhead, campaign_throughput,
-                            bench_kernels, roofline)
+                            convex_attack, saddle_escape, overhead,
+                            campaign_throughput, bench_kernels, roofline)
     jobs = {
         "table1": lambda: table1_attack_grid.run(steps=steps),
         "fig2a": lambda: fig2_detection.run(steps=max(steps, 120)),
         "fig2b": lambda: fig2_reset.run(steps=steps),
         "convex_attack": lambda: convex_attack.run(steps=max(steps, 150)),
+        "saddle_escape": lambda: saddle_escape.run(
+            steps=300 if args.quick else 400,
+            seeds=2 if args.quick else 3),
         "overhead": lambda: overhead.run(quick=args.quick),
         "campaign": lambda: campaign_throughput.run(quick=args.quick),
         "kernels": bench_kernels.run,

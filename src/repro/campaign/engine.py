@@ -48,6 +48,7 @@ from repro.configs.base import TrainConfig
 from repro.core import attacks as atk_lib
 from repro.core import defenses as dfn_lib
 from repro.data import hetero as het_lib
+from repro.data import saddle as sad_lib
 from repro.data import tasks
 from repro.data.pipeline import flip_labels, worker_split
 from repro.optim import make_optimizer
@@ -78,15 +79,24 @@ def batch_key(s: Scenario) -> Tuple:
     return (fam, s.defense, s.m, s.steps, s.lr, s.batch, s.optimizer,
             s.momentum, s.T0, s.T1, s.reset_period, s.delay, s.burst_start,
             s.burst_length, s.d_in, s.d_hidden, s.n_classes, s.task_seed,
-            s.hetero,
+            s.hetero, s.task, s.perturb,
             s.bucket_s if s.defense.startswith("bucketing") else None,
             s.n_byz if s.defense in STATIC_NBYZ_DEFENSES else None)
 
 
-def _build_attack(family: str, rep: Scenario, knobs) -> atk_lib.Attack:
+def _build_attack(family: str, rep: Scenario, knobs,
+                  saddle_task=None) -> atk_lib.Attack:
     """Instantiate the attack from the vmappable ``knobs`` dict — the
     scale and adapt_* entries may be traced scalars (the attack closures
-    only do arithmetic with them)."""
+    only do arithmetic with them).  ``saddle_task`` carries the planted
+    directions the task-coupled ``saddle_push`` needs (DESIGN.md §14)."""
+    if family == "saddle_push":
+        if saddle_task is None:
+            raise ValueError("saddle_push needs a planted-saddle task")
+        return atk_lib.make_saddle_push(
+            saddle_task.dirs, boost_init=knobs["adapt_init"],
+            up=knobs["adapt_rate"], down=knobs["adapt_down"],
+            target=knobs["adapt_target"])
     if family == "scaled_flip":
         return atk_lib.Attack("scaled_flip",
                               atk_lib.make_scaled_flip(knobs["attack_scale"]))
@@ -146,10 +156,12 @@ def make_trial_fn(rep: Scenario):
 
     ``knobs`` is the dict of vmappable scalars built by
     :func:`stack_knobs` (seed, attack/filter/defense knobs, the hetero
-    knobs).  Everything else about ``rep`` is baked into the traced
-    program, which is why only scenarios sharing :func:`batch_key` may be
-    stacked into one call.
+    and saddle knobs).  Everything else about ``rep`` is baked into the
+    traced program, which is why only scenarios sharing
+    :func:`batch_key` may be stacked into one call.
     """
+    if rep.task in sad_lib.SADDLE_TASKS:
+        return _make_saddle_trial_fn(rep)
     family, _ = attack_family(rep)
     task = tasks.make_teacher_task(rep.d_in, rep.d_hidden, rep.n_classes,
                                    seed=rep.task_seed)
@@ -170,6 +182,9 @@ def make_trial_fn(rep: Scenario):
                                  attack=attack, seed=seed)
         step_fn = make_train_step(tasks.mlp_loss, opt, byz_mask=byz_mask,
                                   defense=defense, attack=attack,
+                                  perturb=rep.perturb,
+                                  escape_nu=knobs["escape_nu"],
+                                  escape_thresh=knobs["escape_thresh"],
                                   jit=False)
 
         # In-scan data generation, bit-compatible with the python
@@ -212,6 +227,73 @@ def make_trial_fn(rep: Scenario):
         eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(EVAL_KEY),
                                      EVAL_BATCH)
         out = {"acc": tasks.mlp_accuracy(final.params, eval_b),
+               "traces": traces}
+        good = dfn_lib.final_good(final.defense_state)
+        if good is not None:
+            out["final_good"] = good
+            out["caught_byz"] = (byz_mask & ~good).sum()
+            out["evicted_honest"] = (~byz_mask & ~good).sum()
+        return out
+
+    return trial
+
+
+def _make_saddle_trial_fn(rep: Scenario):
+    """Trial builder for the planted-saddle task family (DESIGN.md §14).
+
+    Program structure: the task kind, its planted directions, and the
+    ``perturb`` mode.  Traced knobs: ``saddle_gap`` / ``noise_r`` /
+    ``vr_period`` / ``escape_nu`` / ``escape_thresh`` — all pure
+    arithmetic inside the loss, batch_fn, probe, and trainer, so every
+    gap/noise/VR variant of one kind is a lane of the same program.
+    """
+    family, _ = attack_family(rep)
+    stask = sad_lib.make_saddle_task(rep.d_in, rep.task, seed=rep.task_seed)
+    opt = make_optimizer(TrainConfig(lr=rep.lr, momentum=rep.momentum,
+                                     optimizer=rep.optimizer))
+    dynamic_nbyz = rep.defense not in STATIC_NBYZ_DEFENSES
+
+    def trial(knobs):
+        seed = knobs["seed"]
+        n_byz = knobs["n_byz"] if dynamic_nbyz else rep.n_byz
+        byz_mask = jnp.arange(rep.m) < n_byz
+        attack = _build_attack(family, rep, knobs, saddle_task=stask)
+        defense = _build_defense(rep, knobs)
+        gap = knobs["saddle_gap"]
+
+        loss_fn = sad_lib.make_saddle_loss(stask, gap, knobs["noise_r"])
+        params = sad_lib.x_init(stask)
+        state = init_train_state(params, opt, defense=defense,
+                                 attack=attack, seed=seed)
+        step_fn = make_train_step(loss_fn, opt, byz_mask=byz_mask,
+                                  defense=defense, attack=attack,
+                                  perturb=rep.perturb,
+                                  escape_nu=knobs["escape_nu"],
+                                  escape_thresh=knobs["escape_thresh"],
+                                  so_probe=sad_lib.make_probe(stask, gap),
+                                  jit=False)
+
+        def batch_fn(t):
+            ta = sad_lib.anchor_step(t, knobs["vr_period"])
+            return sad_lib.saddle_batch(
+                stask, sad_lib.step_key(seed, ta), rep.batch, rep.m,
+                scale=sad_lib.vr_scale(knobs["vr_period"]))
+
+        held_fn = None
+        if defense.needs_held_batch:
+            def held_fn(t):  # noqa: E306 — unsplit 10-sample noise batch
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey((seed + 7) ^ 0xDA7A), t)
+                return {"eps": jax.random.normal(key, (10, stask.d),
+                                                 jnp.float32)}
+
+        final, traces = scan_trial(step_fn, state, batch_fn=batch_fn,
+                                   steps=rep.steps, held_fn=held_fn)
+
+        # "acc" for a saddle task is the escape predicate on the final
+        # iterate, so every downstream table/store path works unchanged
+        out = {"acc": sad_lib.escaped(stask, final.params["x"],
+                                      gap).astype(jnp.float32),
                "traces": traces}
         good = dfn_lib.final_good(final.defense_state)
         if good is not None:
@@ -269,6 +351,19 @@ def stack_knobs(group: Sequence[Scenario]) -> Dict[str, jax.Array]:
                                     jnp.float32),
         "hetero_shift": jnp.asarray([s.hetero_shift for s in group],
                                     jnp.float32),
+        # planted-saddle knobs (DESIGN.md §14) — curvature gap, noise
+        # radius, SVRG anchor period, and the sgd_escape perturbation
+        # knobs all feed only arithmetic inside the saddle loss /
+        # batch_fn / probe / trainer, so every gap / noise / VR variant
+        # of one task kind is a lane of the same program
+        "saddle_gap": jnp.asarray([s.saddle_gap for s in group],
+                                  jnp.float32),
+        "noise_r": jnp.asarray([s.noise_r for s in group], jnp.float32),
+        "vr_period": jnp.asarray([s.vr_period for s in group], jnp.int32),
+        "escape_nu": jnp.asarray([s.escape_nu for s in group],
+                                 jnp.float32),
+        "escape_thresh": jnp.asarray([s.escape_thresh for s in group],
+                                     jnp.float32),
     }
 
 
@@ -294,6 +389,12 @@ def _lane_record(lane: Dict) -> Dict:
         # measured heterogeneity alongside accuracy (DESIGN.md §13):
         # trial-mean honest dissimilarity, reported per cell
         rec["zeta_sq_mean"] = float(jnp.asarray(traces["zeta_sq"]).mean())
+    if "escaped" in traces:
+        # second-order lane (DESIGN.md §14): first step the escape
+        # predicate fired (-1 = never), plus the final Rayleigh proxy
+        rec["escape_step"] = sad_lib.first_escape_step(traces["escaped"])
+        rec["min_eig_final"] = float(
+            jnp.asarray(traces["min_eig_proxy"])[-1])
     rec["traces"] = traces
     return rec
 

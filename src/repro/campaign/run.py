@@ -22,6 +22,13 @@ knob axes into vmap lanes, see ``engine.batch_key``):
                    Dirichlet label-skew alpha sweep x defense x attack
                    plus a teacher-rotation concept-shift block — the
                    hetero_alpha/hetero_shift knobs are vmap lanes
+  saddle           saddle-escape verification testbed (DESIGN.md §14):
+                   planted-saddle task x defense x attack, reporting
+                   escape-step distributions — safeguard + sgd_escape
+                   noise escapes within the theorem's budget while the
+                   undefended mean under saddle_push provably stalls
+                   (use --steps 400 for the separation; the
+                   saddle_gap / noise_r / vr_period knobs are vmap lanes)
   smoke            2x2 mini-grid for CI / tests
 
 A second invocation with the same arguments runs 0 new cells (the store
@@ -114,6 +121,35 @@ def _hetero(seeds: int, steps: int) -> List[Scenario]:
     return with_seeds(grid, seeds)
 
 
+def _saddle(seeds: int, steps: int) -> List[Scenario]:
+    """Saddle-escape verification campaign (DESIGN.md §14): both planted
+    task kinds x {theorem row, stall row}.  The theorem row is
+    safeguard_double + sgd_escape perturbation (clean, attacked, and an
+    SVRG-anchored lane); the stall row is the undefended mean under the
+    curvature-aware saddle_push colluders (boost ramps against null
+    feedback, so the iterate stays pinned at the saddle: escape_step
+    stays -1).  Run with --steps 400 to see the separation; see
+    ``escape_budget`` for the predicted bound."""
+    base = dict(d_in=[16], lr=[0.1], batch=[40], noise_r=[0.05],
+                saddle_gap=[0.5, 1.0], steps=[steps])
+    grid: List[Scenario] = []
+    for task in ("saddle_quad", "saddle_chain"):
+        # theorem row: clean, SVRG-anchored, and attacked lanes (the
+        # clean vr_period 0/8 cells are lanes of one program)
+        grid += expand_grid(task=[task], defense=["safeguard_double"],
+                            perturb=["sgd_escape"], escape_nu=[0.1],
+                            attack=["none"], vr_period=[0, 8], **base)
+        grid += expand_grid(task=[task], defense=["safeguard_double"],
+                            perturb=["sgd_escape"], escape_nu=[0.1],
+                            attack=["saddle_push"], adapt_init=[1.0],
+                            **base)
+        # stall row: undefended mean under the saddle-point attack
+        grid += expand_grid(task=[task], defense=["mean"],
+                            attack=["saddle_push"], adapt_init=[1.0],
+                            **base)
+    return with_seeds(grid, seeds)
+
+
 def _smoke(seeds: int, steps: int) -> List[Scenario]:
     grid = expand_grid(attack=["sign_flip", "variance"],
                        defense=["safeguard_double", "coord_median"],
@@ -129,6 +165,7 @@ CAMPAIGNS: Dict[str, Callable[[int, int], List[Scenario]]] = {
     "adaptive": _adaptive,
     "defense": _defense,
     "hetero": _hetero,
+    "saddle": _saddle,
     "smoke": _smoke,
 }
 
@@ -171,9 +208,11 @@ def main(argv=None) -> Dict:
             caught = rec.get("caught_byz", "-")
             zeta = rec.get("zeta_sq_mean")
             zeta = f",zeta_sq={zeta:.4g}" if zeta is not None else ""
+            esc = rec.get("escape_step")
+            esc = f",escape_step={esc}" if esc is not None else ""
             print(f"campaign,{args.campaign},{s.attack},{s.defense},"
                   f"seed={s.seed},acc={rec['acc']:.4f},caught={caught}"
-                  f"{zeta}")
+                  f"{zeta}{esc}")
     wall = time.time() - t0
     store.write_meta({"campaign": args.campaign, "seeds": args.seeds,
                       "steps": steps, "cells": len(scenarios),

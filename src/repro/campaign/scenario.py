@@ -36,6 +36,15 @@ from repro.core.attacks import ADAPTIVE_DEFAULTS, VARIANCE_Z
 from repro.core.defenses import (DEFENSE_DEFAULTS, bucketing_krum_feasible,
                                  derive_bucket_nbyz)
 from repro.data.hetero import HETERO_MODELS
+from repro.data.saddle import SADDLE_TASKS
+
+# Task families (program structure — each traces its own loss/batch_fn):
+# the teacher-student benchmark task plus the planted-saddle testbed
+# (DESIGN.md §14).
+TASK_MODELS = ("teacher",) + SADDLE_TASKS
+# Post-aggregation perturbation modes (train.trainer): "sgd_escape" is
+# the paper's isotropic noise injection near stationary points.
+PERTURB_MODES = ("none", "sgd_escape")
 
 # The paper's Table 1 grid (Section 5 / Appendix C) — canonical lists,
 # re-exported by benchmarks.common for back-compat.
@@ -113,6 +122,22 @@ class Scenario:
     # (the wrapped aggregator runs on m / bucket_s rows), so it is part
     # of batch_key for bucketing_* defenses, never a vmap knob
     bucket_s: int = DEFENSE_DEFAULTS["bucket_s"]
+    # task family (program structure, batch_key): "teacher" is the
+    # pre-saddle path; "saddle_quad"/"saddle_chain" are the planted-
+    # saddle testbed (DESIGN.md §14) with dimension d_in and knobs below
+    task: str = "teacher"
+    # planted-saddle knobs (vmap axes, engine.stack_knobs): curvature
+    # gap (lambda_min = -saddle_gap at the saddle), gradient-noise
+    # radius, and the Byzantine-SVRG anchor period (0/1 = plain SGD)
+    saddle_gap: float = 0.5
+    noise_r: float = 0.05
+    vr_period: int = 0
+    # saddle-escape perturbation (train.trainer): the mode is program
+    # structure (extra rng split), the noise scale / near-stationary
+    # gate are vmap knob axes
+    perturb: str = "none"
+    escape_nu: float = 0.01
+    escape_thresh: float = 0.1
     # teacher-student task shape
     d_in: int = 32
     d_hidden: int = 64
@@ -132,6 +157,30 @@ class Scenario:
             raise ValueError(
                 f"scenario {self.attack}/{self.defense}: unknown hetero "
                 f"model {self.hetero!r} (one of {HETERO_MODELS})")
+        if self.task not in TASK_MODELS:
+            raise ValueError(
+                f"scenario {self.attack}/{self.defense}: unknown task "
+                f"{self.task!r} (one of {TASK_MODELS})")
+        if self.perturb not in PERTURB_MODES:
+            raise ValueError(
+                f"scenario {self.attack}/{self.defense}: unknown perturb "
+                f"mode {self.perturb!r} (one of {PERTURB_MODES})")
+        if self.task in SADDLE_TASKS:
+            if self.attack == "label_flip":
+                raise ValueError(
+                    f"scenario {self.attack}/{self.defense}: label_flip "
+                    "is a data attack — the planted-saddle task has no "
+                    "labels to flip")
+            if self.hetero != "iid":
+                raise ValueError(
+                    f"scenario {self.attack}/{self.defense}: hetero model "
+                    f"{self.hetero!r} is a teacher-task axis — the saddle "
+                    "testbed's noise model is IID by construction")
+        elif self.attack == "saddle_push":
+            raise ValueError(
+                f"scenario {self.attack}/{self.defense}: saddle_push "
+                "needs the planted escape directions — task must be one "
+                f"of {SADDLE_TASKS}, got {self.task!r}")
         if self.bucket_s < 1:
             # validated for EVERY defense: the engine forwards bucket_s
             # to make_registry unconditionally, where 0 would be an

@@ -54,7 +54,22 @@ Feedback-coupled (adaptive) attacks:
     distance 0, hugging the honest cluster) and ramp ``eps`` greedily
     while one of them *holds* the median — trying to drag the reference
     point and push honest workers over the threshold — retreating toward
-    the honest mean whenever the median is lost or a colluder is caught.
+    the honest mean whenever the median is lost or a colluder is caught;
+  * ``saddle_push``       — the saddle-point attack of Yin et al.
+    (arXiv:1806.05358) on the planted-saddle testbed (DESIGN.md §14):
+    colluders know the planted negative-curvature subspace, mimic the
+    honest mean off it, and on it report the cancellation
+    ``-(n_h/n_b) * boost * P_esc(mean honest)`` so the aggregate's
+    escape component becomes ``(1 - boost)`` of honest — ``boost > 1``
+    actively pushes the iterate back toward the saddle.  Near the
+    saddle honest gradients are tiny, so the cancellation is almost
+    free; as the iterate starts to escape the cost grows and the
+    safeguard's windowed accumulators expose it.  The same controller
+    as ``adaptive_flip`` is the honest-mimicry budget: ``boost`` ramps
+    while the colluders' accumulated distance has headroom and retreats
+    when the live threshold leaves none (task-coupled: built by the
+    campaign engine with the task's planted directions, not part of
+    :func:`make_registry`).
 
 Label-flipping is a *data* attack, implemented in ``repro.data`` (the
 Byzantine worker computes a true gradient of a corrupted loss).
@@ -473,6 +488,80 @@ def make_median_capture(eps_init=ADAPTIVE_DEFAULTS["adapt_init"],
         return {"eps": eps, "n_caught": n_caught}
 
     return Attack("median_capture", act, init=init, observe=observe)
+
+
+def make_saddle_push(dirs: jax.Array,
+                     boost_init=ADAPTIVE_DEFAULTS["adapt_init"],
+                     up=ADAPTIVE_DEFAULTS["adapt_rate"],
+                     down=ADAPTIVE_DEFAULTS["adapt_down"],
+                     target=ADAPTIVE_DEFAULTS["adapt_target"],
+                     boost_min: float = 0.02, boost_max: float = 8.0
+                     ) -> Attack:
+    """Saddle-point attack [Yin et al., arXiv:1806.05358] on the
+    planted-saddle family (``repro.data.saddle``; DESIGN.md §14).
+
+    ``dirs`` is the static ``(k, d)`` orthonormal basis of the planted
+    negative-curvature subspace — Remark 2.2's threat model lets the
+    colluders know the objective, so they know exactly which components
+    drive escape.  ``act`` reports, for every Byzantine row,
+
+        mu - P_esc mu  -  (n_h / n_b) * boost * P_esc mu
+
+    i.e. honest mimicry off the escape subspace (zero deviation there —
+    the concentration filter sees nothing) and a scaled *cancellation*
+    on it: the aggregate mean's escape component becomes ``(n_h / m) *
+    (1 - boost) * P_esc mu``, so ``boost = 1`` suppresses the honest
+    escape drive exactly and ``boost > 1`` reverses it (gradient
+    pointing *away* from the saddle gets flipped into a pull back onto
+    it).  The colluders' deviation from the honest mean lives entirely
+    in the k-dim escape subspace with norm ``(n_h/n_b) * boost *
+    ||P_esc mu||`` — tiny near the saddle where ``||P_esc mu|| ~
+    noise``, growing as the iterate escapes, which is exactly the
+    signal the safeguard's windowed accumulators concentrate on.
+
+    ``observe`` is the honest-mimicry budget: the same multiplicative
+    controller as ``adaptive_flip`` ramps ``boost`` toward the live
+    threshold's ``target`` fraction and backs off on a fresh eviction,
+    so under a filtering defense the total pull-back the colluders can
+    exert is bounded by the threshold — the paper's concentration
+    argument then forces escape (the theorem-level separation the
+    saddle campaign asserts).  Under no defense the null feedback's
+    unbounded headroom lets ``boost`` ramp to ``boost_max`` and the
+    iterate provably stalls.
+    """
+    def init(grads_like):
+        return {"boost": jnp.asarray(boost_init, f32),
+                "n_caught": jnp.zeros((), f32)}
+
+    def act(grads, byz_mask, state, step, rng):
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        if len(leaves) != 1:
+            raise ValueError("saddle_push assumes the planted-saddle "
+                             "task layout: a single (m, d) gradient leaf")
+        g = leaves[0].astype(f32)                        # (m, d)
+        w = (~byz_mask).astype(f32)
+        n_h = jnp.maximum(w.sum(), 1.0)
+        n_b = jnp.maximum(byz_mask.sum().astype(f32), 1.0)
+        mu = (g * w[:, None]).sum(axis=0) / n_h          # honest mean (d,)
+        u = dirs @ mu                                    # (k,) escape drive
+        esc = dirs.T @ u                                 # P_esc mu  (d,)
+        adv = (mu - esc) - (n_h / n_b) * state["boost"] * esc
+        adv = jnp.broadcast_to(adv[None], g.shape)
+        mixed = _mix(grads, jax.tree_util.tree_unflatten(treedef, [adv]),
+                     byz_mask)
+        return mixed, state
+
+    def observe(state, fb, byz_mask):
+        n_caught = _caught_count(fb, byz_mask)
+        newly = n_caught > state["n_caught"]
+        frac = _byz_dist_frac(fb, byz_mask)
+        ratio = jnp.clip(target / jnp.maximum(frac, 1e-6), down, up)
+        boost = jnp.where(newly, state["boost"] * down,
+                          state["boost"] * ratio)
+        boost = jnp.clip(boost, boost_min, boost_max)
+        return {"boost": boost, "n_caught": n_caught}
+
+    return Attack("saddle_push", act, init=init, observe=observe)
 
 
 # --------------------------------------------------------------------------

@@ -5,3 +5,7 @@ from repro.data.tasks import (      # noqa: F401
 from repro.data.hetero import (     # noqa: F401
     HETERO_MODELS, hetero_batches, hetero_worker_batch, worker_mixtures,
     zeta_sq)
+from repro.data.saddle import (     # noqa: F401
+    SADDLE_TASKS, SaddleTask, escape_budget, escaped, make_probe,
+    make_saddle_loss, make_saddle_task, min_eig_proxy, saddle_batches,
+    saddle_grad, saddle_value)

@@ -1,0 +1,310 @@
+"""Planted-saddle task family: the saddle-escape verification testbed.
+
+The paper's headline theorem is second-order — SafeguardSGD *escapes
+saddle points* and reaches approximate local minima under Byzantine
+workers — but the teacher-student benchmark only measures accuracy.
+This module provides a synthetic non-convex family whose saddle
+structure is *planted* and therefore fully analytic (DESIGN.md §14):
+gradients, the negative-curvature directions, and the escape predicate
+are all closed-form and O(k d), so theorem-level assertions (escape
+within a predicted step budget) become ordinary tests.
+
+Two task kinds, both built from ``k`` orthonormal planted directions
+``q_1..q_k`` (a seeded QR draw) and a positive-definite bulk:
+
+* ``saddle_quad`` (k = 1) — the single-saddle ``x^T H x`` family:
+
+      f(x) = -(gap/2) (q_1 . x)^2 + (lam/2) ||x - P x||^2
+
+  One controlled negative eigenvalue ``lambda_min = -gap`` with known
+  escape direction ``q_1``; the origin is a strict saddle.  Escape =
+  ``|q_1 . x| >= QUAD_ESCAPE_RADIUS`` (an O(1) displacement — the pure
+  quadratic has no basin, so the radius is a fixed constant).
+
+* ``saddle_chain`` (k = CHAIN_K) — octopus-style chained saddles: each
+  planted direction carries a double well with geometrically decaying
+  curvature gap,
+
+      f(x) = sum_j [ -(gap_j/2) u_j^2 + (beta/4) u_j^4 ]
+             + (lam/2) ||x - P x||^2,      u_j = q_j . x,
+      gap_j = gap * rho^j,  rho < 1,
+
+  so the origin is a strict saddle with ``k`` negative directions and
+  the iterate escapes them *in sequence* — the j-th stage is
+  exponentially slower (escape time ~ 1/gap_j), emulating the chained
+  passage of Du et al.'s octopus through a sequence of near-saddle
+  regions while keeping every quantity separable and exact.  Stage j
+  escapes at ``|u_j| >= sqrt(gap_j / (3 beta))`` — exactly the
+  inflection where the planted Rayleigh quotient turns non-negative, so
+  ``escaped(x)  <=>  min_eig_proxy(x) >= 0`` by construction.
+
+Analytics exposed (all scan/vmap-safe; ``gap`` and ``noise_r`` may be
+traced scalars, which is what lets the campaign engine vmap
+``saddle_gap`` / ``noise_r`` exactly like ``hetero_alpha``):
+
+* :func:`saddle_value` / :func:`saddle_grad` — closed-form f and grad;
+* :func:`min_eig_proxy` — Rayleigh quotient ``min_j q_j^T H(x) q_j``
+  along the planted directions, O(k d), no Hessian materialization
+  (``dw_j''(u_j) = -gap_j + 3 beta u_j^2``; the bulk never contributes
+  because ``P q_j = q_j``);
+* :func:`escaped` — the escape predicate, invariant under the family's
+  symmetry group (reflections ``u_j -> -u_j`` across any planted
+  hyperplane, and any rotation of the bulk complement);
+* :func:`escape_budget` — the predicted escape-step budget from the
+  power-iteration argument of the Theorem (DESIGN.md §14).
+
+Stochastic gradients use the linear noise model: worker ``i`` sees
+
+    loss_i(x) = f(x) + noise_r * mean_b (eps_{i,b} . x),
+
+so ``g_i = grad f(x) + noise_r * mean_b eps_{i,b}`` with eps ~ N(0, I)
+— zero-mean over seeds (tested) and independent of x.  Under this model
+Byzantine SVRG (Khanduri et al., arXiv:1912.04531) reduces *exactly* to
+anchored noise: the control variate ``g_i(x) - g_i(x_a)`` cancels the
+noise term, leaving the reference batch's noise, fixed until the next
+anchor refresh.  :func:`anchor_step` implements that reduction — the
+``vr_period`` knob (0/1 = plain SGD, p >= 2 = refresh every p steps,
+reference noise scaled by :data:`VR_REF_SCALE`) is a vmap axis like
+every other knob.
+
+The per-step key schedule is the data pipeline's
+``fold_in(PRNGKey(seed ^ 0xDA7A), t)`` — :func:`saddle_batches` is the
+python-iterator twin of the engine's in-scan batch_fn (same keys,
+bit-identical batches), mirroring ``hetero.hetero_batches``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+
+# Registered saddle task names — ``Scenario.task`` is validated against
+# TASK_MODELS ("teacher" + these); the kind is program structure for the
+# campaign engine (each kind traces its own loss/batch_fn).
+SADDLE_TASKS = ("saddle_quad", "saddle_chain")
+
+CHAIN_K = 3          # planted directions of the chained family
+CHAIN_RHO = 0.5      # per-stage curvature-gap decay (gap_j = gap * rho^j)
+CHAIN_BETA = 1.0     # quartic coefficient of the double wells
+BULK_LAM = 1.0       # positive curvature of the bulk complement
+# the pure quadratic has no basin boundary, so its escape radius is a
+# fixed O(1) displacement along the planted direction
+QUAD_ESCAPE_RADIUS = 1.0
+# SVRG reference-batch noise scale: the anchored reference gradient is
+# computed on a 4x batch, so its noise is halved (1/sqrt(4))
+VR_REF_SCALE = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class SaddleTask:
+    """Static (program-structure) part of a planted-saddle task; the
+    curvature gap and noise radius stay *traced knobs* so they can be
+    vmapped campaign axes."""
+    d: int
+    kind: str                 # "saddle_quad" | "saddle_chain"
+    k: int                    # number of planted escape directions
+    beta: float               # quartic coefficient (0 => pure quadratic)
+    rho: float                # per-stage gap decay
+    lam: float                # bulk positive curvature
+    seed: int
+    dirs: jax.Array           # (k, d) orthonormal planted directions
+
+
+def make_saddle_task(d: int, kind: str, seed: int = 0) -> SaddleTask:
+    """Build the static task: ``k`` orthonormal planted directions from a
+    seeded QR draw (the saddle is *planted*, not axis-aligned)."""
+    if kind not in SADDLE_TASKS:
+        raise ValueError(f"unknown saddle task {kind!r} "
+                         f"(one of {SADDLE_TASKS})")
+    k = 1 if kind == "saddle_quad" else CHAIN_K
+    if d < k + 1:
+        raise ValueError(f"saddle task needs d >= k+1 (= {k + 1}), got {d}")
+    g = jax.random.normal(jax.random.PRNGKey(seed ^ 0x5ADD), (d, k), f32)
+    q, _ = jnp.linalg.qr(g)                      # (d, k) orthonormal cols
+    beta = 0.0 if kind == "saddle_quad" else CHAIN_BETA
+    return SaddleTask(d=d, kind=kind, k=k, beta=beta, rho=CHAIN_RHO,
+                      lam=BULK_LAM, seed=seed, dirs=q.T)
+
+
+def stage_gaps(task: SaddleTask, gap) -> jax.Array:
+    """``(k,)`` per-stage curvature gaps ``gap * rho^j`` (``gap`` may be
+    traced).  The largest is stage 0: ``lambda_min(H(0)) = -gap``."""
+    decay = jnp.asarray(task.rho, f32) ** jnp.arange(task.k, dtype=f32)
+    return jnp.asarray(gap, f32) * decay
+
+
+def _planted(task: SaddleTask, x: jax.Array) -> jax.Array:
+    """``u_j = q_j . x`` — the planted coordinates, shape (k,)."""
+    return task.dirs @ x
+
+
+def saddle_value(task: SaddleTask, x: jax.Array, gap) -> jax.Array:
+    u = _planted(task, x)
+    gaps = stage_gaps(task, gap)
+    wells = (-0.5 * gaps * u ** 2 + 0.25 * task.beta * u ** 4).sum()
+    bulk = x - task.dirs.T @ u                   # (I - P) x
+    return wells + 0.5 * task.lam * (bulk ** 2).sum()
+
+
+def saddle_grad(task: SaddleTask, x: jax.Array, gap) -> jax.Array:
+    """Closed-form gradient (the property tests pin it against
+    ``jax.grad(saddle_value)`` to f32 tolerance)."""
+    u = _planted(task, x)
+    gaps = stage_gaps(task, gap)
+    dw = -gaps * u + task.beta * u ** 3          # (k,) well derivatives
+    bulk = x - task.dirs.T @ u
+    return task.dirs.T @ dw + task.lam * bulk
+
+
+def min_eig_proxy(task: SaddleTask, x: jax.Array, gap) -> jax.Array:
+    """Rayleigh quotient of the Hessian along the planted directions,
+    ``min_j q_j^T H(x) q_j = min_j (-gap_j + 3 beta u_j^2)`` — O(k d),
+    never materializes H.  At the saddle this is exactly the planted
+    ``lambda_min = -gap``; it brackets the true minimum eigenvalue from
+    above everywhere (Rayleigh) and crosses 0 exactly when every chain
+    stage passes its inflection."""
+    u = _planted(task, x)
+    gaps = stage_gaps(task, gap)
+    return (-gaps + 3.0 * task.beta * u ** 2).min()
+
+
+def escape_radii(task: SaddleTask, gap) -> jax.Array:
+    """``(k,)`` per-stage escape radii.  Chain: ``sqrt(gap_j/(3 beta))``
+    (the inflection of well j, where its curvature turns non-negative);
+    quad: the fixed :data:`QUAD_ESCAPE_RADIUS`."""
+    gaps = stage_gaps(task, gap)
+    if task.beta == 0.0:
+        return jnp.full((task.k,), QUAD_ESCAPE_RADIUS, f32)
+    return jnp.sqrt(gaps / (3.0 * task.beta))
+
+
+def escaped(task: SaddleTask, x: jax.Array, gap) -> jax.Array:
+    """True once every planted stage has left its saddle:
+    ``all_j |u_j| >= r_j``.  Invariant under the family's symmetry group
+    (per-stage reflections ``u_j -> -u_j``, bulk rotations)."""
+    u = _planted(task, x)
+    return (jnp.abs(u) >= escape_radii(task, gap)).all()
+
+
+def escape_budget(task: SaddleTask, gap: float, lr: float,
+                  u0: float, slack: float = 3.0) -> int:
+    """Predicted escape-step budget from the Theorem's power-iteration
+    argument (DESIGN.md §14): along stage j the deterministic dynamics
+    near the saddle are ``u <- (1 + lr * gap_j) u``, so growing from the
+    noise floor ``u0`` to the escape radius ``r_j`` takes
+    ``log(r_j / u0) / log(1 + lr * gap_j)`` steps.  Stages escape
+    concurrently, so the budget is the *slowest* stage (the smallest
+    gap), times ``slack`` for the Byzantine eviction phase and the
+    stochastic noise floor."""
+    gaps = [gap * task.rho ** j for j in range(task.k)]
+    if task.beta == 0.0:
+        radii = [QUAD_ESCAPE_RADIUS] * task.k
+    else:
+        radii = [math.sqrt(g / (3.0 * task.beta)) for g in gaps]
+    worst = max(math.log(max(r / u0, 1.0 + 1e-6)) / math.log1p(lr * g)
+                for g, r in zip(gaps, radii))
+    return int(math.ceil(slack * worst))
+
+
+# --------------------------------------------------------------------------
+# Stochastic-gradient model
+# --------------------------------------------------------------------------
+
+def x_init(task: SaddleTask) -> dict:
+    """Start *exactly at the planted saddle* — the hard case the theorem
+    is about: the gradient is 0 there, only noise can initiate escape."""
+    return {"x": jnp.zeros((task.d,), f32)}
+
+
+def make_saddle_loss(task: SaddleTask, gap, noise_r):
+    """``loss(params, worker_batch) -> scalar`` with the linear noise
+    model: ``f(x) + noise_r * mean_b (eps_b . x)``.  ``value_and_grad``
+    therefore yields ``g_i = grad f + noise_r * mean_b eps_{i,b}`` —
+    gradient noise with zero mean and covariance independent of x.
+    ``gap`` / ``noise_r`` may be traced (vmap knobs)."""
+    def loss(params, batch):
+        x = params["x"]
+        noise = (batch["eps"] @ x).mean()
+        return saddle_value(task, x, gap) + jnp.asarray(noise_r, f32) * noise
+    return loss
+
+
+def anchor_step(t, period) -> jax.Array:
+    """Byzantine-SVRG anchoring under the linear noise model: the step
+    whose key the batch is drawn from.  ``period <= 1`` is plain SGD
+    (fresh noise every step); ``period >= 2`` re-draws only at anchor
+    refreshes ``t - t % period`` — the exact reduction of the SVRG
+    control variate for x-independent noise.  Both args may be traced."""
+    t = jnp.asarray(t, jnp.int32)
+    p = jnp.asarray(period, jnp.int32)
+    return jnp.where(p >= 2, t - t % jnp.maximum(p, 1), t)
+
+
+def vr_scale(period) -> jax.Array:
+    """Noise scale of the (4x larger) SVRG reference batch; 1 when
+    variance reduction is off."""
+    p = jnp.asarray(period, jnp.int32)
+    return jnp.where(p >= 2, jnp.asarray(VR_REF_SCALE, f32),
+                     jnp.asarray(1.0, f32))
+
+
+def saddle_batch(task: SaddleTask, key, batch: int, m: int,
+                 scale=1.0) -> dict:
+    """One worker-split noise batch ``{"eps": (m, B/m, d)}``; ``scale``
+    (traced) multiplies the draw — the SVRG reference-batch factor."""
+    per = batch // m
+    eps = jax.random.normal(key, (m, per, task.d), f32)
+    return {"eps": jnp.asarray(scale, f32) * eps}
+
+
+def step_key(seed, t) -> jax.Array:
+    """The data pipeline's step key — same salt/fold-in scheme as
+    ``tasks.teacher_batches`` so both paths share one schedule."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed ^ 0xDA7A), t)
+
+
+def saddle_batches(task: SaddleTask, batch: int, *, seed: int = 0,
+                   m: int, vr_period: int = 0) -> Iterator[dict]:
+    """Python-iterator twin of the engine's in-scan saddle batch_fn (the
+    legacy ``Trainer`` path) — same key schedule, same anchoring,
+    bit-identical batches."""
+    t = 0
+    while True:
+        ta = int(anchor_step(t, vr_period))
+        yield saddle_batch(task, step_key(seed, ta), batch, m,
+                           scale=vr_scale(vr_period))
+        t += 1
+
+
+def make_probe(task: SaddleTask, gap):
+    """The second-order trace lane (DESIGN.md §14): a pure function of
+    the current params the trainer traces every step next to loss /
+    zeta_sq.  ``true_grad_norm`` is the theorem's ||grad f(x)|| (the
+    *analytic* gradient, not the aggregated stochastic one),
+    ``min_eig_proxy`` the planted Rayleigh quotient, ``escaped`` the
+    predicate as f32 — the engine derives ``escape_step`` (first step it
+    fires) from this trace."""
+    def probe(params):
+        x = params["x"]
+        g = saddle_grad(task, x, gap)
+        return {
+            "true_grad_norm": jnp.sqrt((g ** 2).sum()),
+            "min_eig_proxy": min_eig_proxy(task, x, gap),
+            "escaped": escaped(task, x, gap).astype(f32),
+        }
+    return probe
+
+
+def first_escape_step(escaped_trace) -> int:
+    """First step the escape predicate fired, else -1 (the 'never
+    escapes' sentinel of the stall assertions)."""
+    esc = np.asarray(escaped_trace)
+    hits = np.flatnonzero(esc > 0.5)
+    return int(hits[0]) if hits.size else -1

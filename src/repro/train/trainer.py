@@ -137,6 +137,9 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
                     zeno_eta: float = 0.1, zeno_rho: float = 5e-4,
                     spmd_axis_name=None, acc_sharding=None,
                     sg_acc_sharding=None, trace_zeta: bool = True,
+                    perturb: str = "none", escape_nu=0.0,
+                    escape_thresh=0.1,
+                    so_probe: Optional[Callable] = None,
                     jit: bool = True):
     """Build the jitted training step.
 
@@ -155,15 +158,35 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
     ``(m, d_pad)`` state buffers (see ``launch.sharding.flat_acc_pspec``);
     ``None`` on a single device.  ``sg_acc_sharding`` is the deprecated
     alias.
+
+    ``perturb="sgd_escape"`` enables the paper's saddle-escape
+    perturbation (DESIGN.md §14): when the aggregated direction's norm
+    falls to ``escape_thresh`` or below — the master's observable proxy
+    for "near a stationary point" — isotropic ``N(0, escape_nu^2 I)``
+    noise is added to it.  Injected *after* aggregation, so Byzantine
+    workers can only react to the draw one step late.  ``escape_nu`` /
+    ``escape_thresh`` may be traced scalars (campaign vmap knobs); the
+    mode itself is program structure (it consumes an extra rng split).
+
+    ``so_probe``: optional pure function ``params -> {name: scalar}``
+    traced into the metrics every step — the second-order trace lane of
+    the planted-saddle testbed (``data.saddle.make_probe``: the analytic
+    ``true_grad_norm`` / ``min_eig_proxy`` / ``escaped``).
     """
     defense = resolve_defense(defense, sg_cfg, aggregator)
     if acc_sharding is None:
         acc_sharding = sg_acc_sharding
     attack = attack or atk_lib.Attack("none", atk_lib.attack_none)
+    if perturb not in ("none", "sgd_escape"):
+        raise ValueError(f"unknown perturbation mode {perturb!r} "
+                         "(one of 'none', 'sgd_escape')")
     m = int(byz_mask.shape[0])
 
     def step_fn(state: TrainState, batch, held_batch=None):
-        rng, k_attack, k_noise = jax.random.split(state.rng, 3)
+        if perturb == "sgd_escape":
+            rng, k_attack, k_noise, k_escape = jax.random.split(state.rng, 4)
+        else:
+            rng, k_attack, k_noise = jax.random.split(state.rng, 3)
 
         # (1) per-worker gradients
         vg = jax.value_and_grad(loss_fn)
@@ -211,6 +234,26 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
         for k in ("dist_to_med_B", "dist_to_med_A"):
             if k in info:
                 metrics[k] = jnp.asarray(info[k], jnp.float32)
+        # second-order trace lane (DESIGN.md §14): analytic saddle
+        # diagnostics of the current iterate, traced like zeta_sq
+        if so_probe is not None:
+            metrics.update(so_probe(state.params))
+        # the paper's saddle-escape perturbation: isotropic noise on the
+        # aggregated direction when its norm says "near-stationary"
+        if perturb == "sgd_escape":
+            agg_norm = jnp.sqrt(tu.tree_sq_norm(agg))
+            on = (agg_norm <= jnp.asarray(escape_thresh, f32)).astype(f32)
+            leaves = jax.tree_util.tree_leaves(agg)
+            keys = iter(list(jax.random.split(k_escape, len(leaves))))
+
+            def _noise(leaf):
+                k = next(keys)
+                xi = jax.random.normal(k, leaf.shape, f32)
+                return (leaf.astype(f32)
+                        + on * jnp.asarray(escape_nu, f32) * xi
+                        ).astype(leaf.dtype)
+            agg = jax.tree.map(_noise, agg)
+            metrics["escape_on"] = on
         feedback = atk_lib.defense_feedback(info, m)
 
         # feedback coupling (DESIGN.md §11): adaptive attacks fold this

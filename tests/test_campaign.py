@@ -203,6 +203,32 @@ def test_engine_matches_trainer_path_hetero_and_bucketing():
             assert eng["evicted_honest"] == loop["evicted_honest"]
 
 
+def test_convex_attack_port_matches_legacy_loop():
+    """Satellite: benchmarks/convex_attack.py now routes through the
+    campaign engine — both its variants (the paper's windowed safeguard
+    and the unwindowed convex-filter emulation, custom T0/T1/floor and
+    an explicit burst window) reproduce the raw Trainer loop they
+    replaced bit-for-bit, and the ported benchmark still shows the
+    Appendix C.3 separation: windows catch the burst, the whole-history
+    filter does not."""
+    from benchmarks import convex_attack
+    task = tasks.make_teacher_task()
+    caught = {}
+    for name, (t0, t1, floor) in convex_attack.VARIANTS.items():
+        scn = convex_attack.variant_scenario(name, steps=120)
+        eng = engine.run_scenarios([scn])[scenario_id(scn)]
+        loop = common.run_experiment_loop(
+            task, "burst", "safeguard_double", steps=120, batch=100,
+            t0=t0, t1=t1, floor=floor,
+            burst_start=convex_attack.BURST_START,
+            burst_length=convex_attack.BURST_LENGTH)
+        assert eng["acc"] == pytest.approx(loop["acc"], abs=1e-12), name
+        assert eng["caught_byz"] == loop["caught_byz"], name
+        assert eng["evicted_honest"] == loop["evicted_honest"], name
+        caught[name] = eng["caught_byz"]
+    assert caught["windowed"] == 4 and caught["unwindowed"] == 0
+
+
 def test_stateful_attacks_vmap_bitexact():
     """Satellite: delayed/burst attack-state pytrees batch correctly over
     the seed axis — vmapped lanes match the unbatched trajectory

@@ -385,6 +385,78 @@ def test_dirichlet_alpha_inf_recovers_iid_split_bitexact(seed, mm, perm):
         assert np.array_equal(np.asarray(got["y"]), np.asarray(iid["y"]))
 
 
+# ------------------------------------------------ planted-saddle family
+
+
+_saddle_kind = st.sampled_from(["saddle_quad", "saddle_chain"])
+_gap = st.floats(0.05, 3.0, allow_nan=False, width=32)
+
+
+@given(_saddle_kind, _gap, st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_saddle_analytic_grad_matches_autodiff(kind, gap, seed):
+    """The closed-form gradient is exactly jax.grad of the closed-form
+    value, to f32 tolerance, across the whole (kind, gap, x) family."""
+    from repro.data import saddle as sad
+    task = sad.make_saddle_task(10, kind, seed=seed % 7)
+    x = 2.0 * jax.random.normal(jax.random.PRNGKey(seed), (10,))
+    want = jax.grad(lambda z: sad.saddle_value(task, z, gap))(x)
+    np.testing.assert_allclose(np.asarray(sad.saddle_grad(task, x, gap)),
+                               np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+@given(_saddle_kind, _gap, st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_saddle_min_eig_proxy_brackets_planted_minimum(kind, gap, seed):
+    """At the planted saddle the Rayleigh proxy equals lambda_min = -gap
+    exactly; everywhere it stays >= -gap (quartic curvature only adds)."""
+    from repro.data import saddle as sad
+    task = sad.make_saddle_task(10, kind, seed=seed % 5)
+    at_saddle = float(sad.min_eig_proxy(task, sad.x_init(task)["x"], gap))
+    assert at_saddle == pytest.approx(-gap, rel=1e-5)
+    x = 3.0 * jax.random.normal(jax.random.PRNGKey(seed), (10,))
+    assert float(sad.min_eig_proxy(task, x, gap)) >= -gap - 1e-5 * gap
+
+
+@given(_saddle_kind, _gap, st.integers(0, 2 ** 31 - 1),
+       st.integers(0, 2 ** 8 - 1))
+@settings(**SET)
+def test_saddle_escaped_invariant_under_symmetry(kind, gap, seed, bits):
+    """The escape predicate is invariant under the family's symmetry
+    group: any subset of per-stage reflections u_j -> -u_j plus any
+    translation in the bulk complement."""
+    from repro.data import saddle as sad
+    task = sad.make_saddle_task(10, kind, seed=seed % 5)
+    x = 1.5 * jax.random.normal(jax.random.PRNGKey(seed), (10,))
+    u = task.dirs @ x
+    signs = jnp.asarray([1.0 if (bits >> j) & 1 else -1.0
+                         for j in range(task.k)], jnp.float32)
+    reflected = x + task.dirs.T @ ((signs - 1.0) * u)
+    v = jax.random.normal(jax.random.PRNGKey(seed ^ 0xB11C), (10,))
+    v = v - task.dirs.T @ (task.dirs @ v)            # bulk component
+    moved = reflected + 2.0 * v
+    assert bool(sad.escaped(task, moved, gap)) == \
+        bool(sad.escaped(task, x, gap))
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(1, 4), st.integers(1, 4))
+@settings(deadline=None, max_examples=10)
+def test_saddle_noise_zero_mean_over_seeds(seed0, mm, per):
+    """IID linear-noise model: worker noise has zero mean over seeds, so
+    E[g_i] is the analytic gradient (SVRG's control variate cancels it
+    exactly under anchoring)."""
+    from repro.data import saddle as sad
+    task = sad.make_saddle_task(6, "saddle_quad")
+    m = 2 * mm
+    total = np.zeros((6,))
+    n = 200
+    for s in range(n):
+        b = sad.saddle_batch(task, sad.step_key(seed0 + s, 0),
+                             m * per, m)
+        total += np.asarray(b["eps"]).mean(axis=(0, 1))
+    assert np.abs(total / n).max() < 5.0 / np.sqrt(n * m * per)
+
+
 @given(stacks(m_min=4), st.integers(0, 2 ** 16 - 1))
 @settings(**SET)
 def test_zeta_sq_matches_numpy(arr, mask_bits):

@@ -1,0 +1,361 @@
+"""Saddle-escape verification testbed (DESIGN.md §14): planted-saddle
+family analytics, the second-order trace lane, the saddle_push attack,
+engine-vs-loop equivalence, and the theorem-level escape/stall
+separation.
+
+The concrete analytic tests here are the always-run twins of the
+hypothesis properties in ``test_property.py`` (hypothesis is an optional
+dev dependency)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import common
+from repro.campaign import engine
+from repro.campaign.scenario import Scenario, scenario_id
+from repro.core import attacks as atk_lib
+from repro.data import saddle as sad
+
+
+# ------------------------------------------------------ family analytics
+
+
+@pytest.mark.parametrize("kind", sad.SADDLE_TASKS)
+def test_analytic_grad_matches_autodiff(kind):
+    task = sad.make_saddle_task(12, kind, seed=3)
+    for gap in (0.3, 1.0):
+        for i in range(4):
+            x = jax.random.normal(jax.random.PRNGKey(i), (12,))
+            want = jax.grad(lambda z: sad.saddle_value(task, z, gap))(x)
+            got = sad.saddle_grad(task, x, gap)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", sad.SADDLE_TASKS)
+def test_min_eig_proxy_brackets_planted_lambda_min(kind):
+    """At the saddle the Rayleigh proxy is exactly the planted
+    lambda_min = -gap; everywhere else it stays >= -gap (the quartic
+    only adds positive curvature)."""
+    task = sad.make_saddle_task(12, kind)
+    gap = 0.7
+    x0 = sad.x_init(task)["x"]
+    assert float(sad.min_eig_proxy(task, x0, gap)) == pytest.approx(-gap)
+    for i in range(6):
+        x = 2.0 * jax.random.normal(jax.random.PRNGKey(i), (12,))
+        assert float(sad.min_eig_proxy(task, x, gap)) >= -gap - 1e-6
+
+
+def test_chain_escape_iff_proxy_nonneg():
+    """saddle_chain's escape radius is the inflection of each well, so
+    the predicate and the proxy crossing 0 coincide by construction."""
+    task = sad.make_saddle_task(10, "saddle_chain")
+    gap = 1.0
+    radii = np.asarray(sad.escape_radii(task, gap))
+    for scale in (0.5, 0.99, 1.01, 2.0):
+        u = scale * radii
+        x = task.dirs.T @ jnp.asarray(u, jnp.float32)
+        esc = bool(sad.escaped(task, x, gap))
+        proxy = float(sad.min_eig_proxy(task, x, gap))
+        assert esc == (proxy >= -1e-6), scale
+        assert esc == (scale >= 1.0)
+
+
+@pytest.mark.parametrize("kind", sad.SADDLE_TASKS)
+def test_escaped_invariant_under_symmetry_group(kind):
+    """Reflections u_j -> -u_j across any planted hyperplane and motion
+    in the bulk complement leave the predicate unchanged."""
+    task = sad.make_saddle_task(12, kind, seed=1)
+    gap = 0.8
+    for i in range(5):
+        x = 1.5 * jax.random.normal(jax.random.PRNGKey(i), (12,))
+        u = task.dirs @ x
+        base = bool(sad.escaped(task, x, gap))
+        for j in range(task.k):                       # reflect stage j
+            flip = x - 2.0 * u[j] * task.dirs[j]
+            assert bool(sad.escaped(task, flip, gap)) == base
+        # bulk translation: v orthogonal to every planted direction
+        v = jax.random.normal(jax.random.PRNGKey(100 + i), (12,))
+        v = v - task.dirs.T @ (task.dirs @ v)
+        assert bool(sad.escaped(task, x + 3.0 * v, gap)) == base
+
+
+def test_noise_model_zero_mean_over_seeds():
+    """IID gradient-noise model: the worker noise eps averages to 0 over
+    seeds, so E[g_i] is the analytic gradient."""
+    task = sad.make_saddle_task(8, "saddle_quad")
+    acc = np.zeros((8,))
+    n = 300
+    for seed in range(n):
+        b = sad.saddle_batch(task, sad.step_key(seed, 0), batch=20, m=10)
+        acc += np.asarray(b["eps"]).mean(axis=(0, 1))
+    assert np.abs(acc / n).max() < 0.02
+
+
+def test_anchor_step_and_vr_scale():
+    """SVRG reduction: period<=1 is plain SGD; period p>=2 pins the key
+    to the last refresh and scales the reference noise."""
+    assert int(sad.anchor_step(7, 0)) == 7
+    assert int(sad.anchor_step(7, 1)) == 7
+    assert int(sad.anchor_step(7, 4)) == 4
+    assert int(sad.anchor_step(8, 4)) == 8
+    assert float(sad.vr_scale(0)) == 1.0
+    assert float(sad.vr_scale(4)) == sad.VR_REF_SCALE
+
+
+def test_iterator_twin_matches_engine_batch_fn():
+    """saddle_batches shares the engine batch_fn's key schedule and
+    anchoring — bit-identical batches."""
+    task = sad.make_saddle_task(8, "saddle_chain")
+    it = sad.saddle_batches(task, 40, seed=5, m=10, vr_period=4)
+    for t in range(10):
+        got = next(it)
+        ta = sad.anchor_step(t, 4)
+        want = sad.saddle_batch(task, sad.step_key(5, ta), 40, 10,
+                                scale=sad.vr_scale(4))
+        assert np.array_equal(np.asarray(got["eps"]),
+                              np.asarray(want["eps"])), t
+
+
+def test_escape_budget_monotone_and_positive():
+    task = sad.make_saddle_task(12, "saddle_chain")
+    b = sad.escape_budget(task, 1.0, 0.1, u0=0.005)
+    assert b > 0
+    # smaller gap / lr / start -> more steps
+    assert sad.escape_budget(task, 0.5, 0.1, u0=0.005) > b
+    assert sad.escape_budget(task, 1.0, 0.05, u0=0.005) > b
+    assert sad.escape_budget(task, 1.0, 0.1, u0=0.0005) > b
+
+
+# ------------------------------------------------- scenario validation
+
+
+def test_saddle_scenario_validation():
+    with pytest.raises(ValueError, match="unknown task"):
+        Scenario(attack="none", defense="mean", task="saddle_cubic")
+    with pytest.raises(ValueError, match="unknown perturb"):
+        Scenario(attack="none", defense="mean", perturb="langevin")
+    with pytest.raises(ValueError, match="data attack"):
+        Scenario(attack="label_flip", defense="mean", task="saddle_quad")
+    with pytest.raises(ValueError, match="teacher-task axis"):
+        Scenario(attack="none", defense="mean", task="saddle_chain",
+                 hetero="dirichlet")
+    with pytest.raises(ValueError, match="planted escape directions"):
+        Scenario(attack="saddle_push", defense="mean")
+    Scenario(attack="saddle_push", defense="mean", task="saddle_quad")
+
+
+def test_saddle_fields_excluded_from_default_scenario_id():
+    """Pre-PR literal hash pins: the new task/perturb/saddle knobs are
+    defaulted out of scenario_id, so every cell stored before this PR
+    keeps its id (store resume untouched)."""
+    s = Scenario(attack="sign_flip", defense="safeguard_double", steps=40)
+    assert scenario_id(s) == "f5e3f7a6f4ccc757"
+    assert scenario_id(Scenario(attack="none", defense="mean")) == \
+        "bd534c8b367be945"
+    # and the new knobs do enter the hash when set
+    ids = {scenario_id(x) for x in (
+        s,
+        dataclasses.replace(s, task="saddle_quad"),
+        dataclasses.replace(s, task="saddle_quad", saddle_gap=1.0),
+        dataclasses.replace(s, task="saddle_quad", noise_r=0.1),
+        dataclasses.replace(s, task="saddle_quad", vr_period=4),
+        dataclasses.replace(s, perturb="sgd_escape"),
+        dataclasses.replace(s, perturb="sgd_escape", escape_nu=0.3),
+        dataclasses.replace(s, perturb="sgd_escape", escape_thresh=0.5),
+    )}
+    assert len(ids) == 8
+
+
+# ------------------------------------------------- engine equivalence
+
+
+LOOP_KW = dict(steps=40, seed=3, gap=1.0, noise_r=0.05, vr_period=4,
+               escape_nu=0.1, adapt_init=1.0)
+
+
+@pytest.mark.parametrize("kind,attack,defense,perturb", [
+    ("saddle_chain", "saddle_push", "safeguard_double", "sgd_escape"),
+    ("saddle_quad", "none", "mean", "sgd_escape"),
+    ("saddle_chain", "saddle_push", "mean", "none"),
+    ("saddle_quad", "sign_flip", "zeno", "none"),
+])
+def test_engine_matches_saddle_loop(kind, attack, defense, perturb):
+    """Engine-vs-Trainer equivalence of the saddle lane: same rng
+    streams and op order, so the discrete traces (escape predicate,
+    filter decisions — including the saddle_push boost controller's
+    effects) are exact and the float traces agree to XLA-fusion ulps."""
+    kw = dict(LOOP_KW, defense_name=defense, attack_name=attack,
+              perturb=perturb)
+    loop = common.run_saddle_loop(kind, **kw)
+    scn = common.saddle_scenario_for(kind, **kw)
+    eng = engine.run_scenarios([scn])[scenario_id(scn)]
+    assert float(eng["acc"]) == loop["acc"]
+    assert eng["escape_step"] == loop["escape_step"]
+    for k in ("caught_byz", "evicted_honest"):
+        if k in loop:
+            assert eng[k] == loop[k], k
+    # second-order lane present and exact; float lanes fusion-tight
+    for k in ("escaped", "min_eig_proxy"):
+        assert np.array_equal(np.asarray(eng["traces"][k]),
+                              np.asarray(loop["traces"][k])), k
+    for k in loop["traces"]:
+        np.testing.assert_allclose(
+            np.asarray(eng["traces"][k], np.float64),
+            np.asarray(loop["traces"][k], np.float64),
+            rtol=1e-4, atol=1e-6, err_msg=k)
+
+
+def test_saddle_knobs_are_vmap_axes():
+    """saddle_gap / noise_r / vr_period / escape_nu lanes share one
+    program; vmapped lanes match the unbatched trajectories exactly on
+    every discrete lane (filter decisions, the escape predicate, the
+    stateful saddle_push boost's evictions) and to XLA-fusion ulps on
+    the float lanes (the attack's ``dirs @ mu`` lowers gemv->gemm under
+    vmap, changing the accumulation order — same as the safeguard_cclip
+    composition precedent)."""
+    scns = [Scenario(attack="saddle_push", defense="safeguard_double",
+                     task="saddle_chain", d_in=12, steps=30, batch=40,
+                     perturb="sgd_escape", adapt_init=1.0,
+                     saddle_gap=g, noise_r=r, vr_period=p, escape_nu=nu)
+            for g, r, p, nu in [(0.5, 0.05, 0, 0.1), (1.0, 0.05, 0, 0.1),
+                                (1.0, 0.02, 4, 0.05)]]
+    assert len(engine.group_scenarios(scns)) == 1
+    batched = engine.run_scenarios(scns, batched=True)
+    unbatched = engine.run_scenarios(scns, batched=False)
+    discrete = ("escaped", "escape_on", "n_good", "caught_byz",
+                "evicted_honest")
+    for s in scns:
+        b, u = batched[scenario_id(s)], unbatched[scenario_id(s)]
+        for key in discrete:
+            assert np.array_equal(b["traces"][key], u["traces"][key]), \
+                (s.saddle_gap, s.vr_period, key)
+        for key in b["traces"]:
+            np.testing.assert_allclose(
+                np.asarray(b["traces"][key], np.float64),
+                np.asarray(u["traces"][key], np.float64),
+                rtol=1e-5, atol=1e-6,
+                err_msg=f"{s.saddle_gap}/{s.vr_period}/{key}")
+        assert b["acc"] == u["acc"]
+        assert b["escape_step"] == u["escape_step"]
+    # the traced gap changes the outcome (not a dead knob)
+    a, b2 = (batched[scenario_id(s)] for s in scns[:2])
+    assert not np.array_equal(a["traces"]["min_eig_proxy"],
+                              b2["traces"]["min_eig_proxy"])
+
+
+def test_second_order_lane_trace_shapes():
+    scn = Scenario(attack="none", defense="safeguard_double",
+                   task="saddle_quad", d_in=8, steps=25, batch=40,
+                   perturb="sgd_escape")
+    rec = engine.run_scenarios([scn])[scenario_id(scn)]
+    for key in ("true_grad_norm", "min_eig_proxy", "escaped",
+                "escape_on", "loss", "n_good"):
+        assert rec["traces"][key].shape == (25,), key
+    assert "escape_step" in rec and "min_eig_final" in rec
+
+
+def test_teacher_path_unchanged_by_saddle_plumbing():
+    """The perturb/saddle knobs default off: a teacher scenario traces no
+    second-order lane, consumes no extra rng split, and batch-keys apart
+    from saddle scenarios."""
+    t = Scenario(attack="sign_flip", defense="mean", steps=10)
+    rec = engine.run_scenarios([t])[scenario_id(t)]
+    assert "escaped" not in rec["traces"]
+    assert "escape_on" not in rec["traces"]
+    s = Scenario(attack="none", defense="mean", task="saddle_quad",
+                 steps=10, batch=40)
+    assert len(engine.group_scenarios(
+        [t, dataclasses.replace(t, attack="none")] + [s])) > 1
+
+
+# ------------------------------------------- saddle_push attack unit
+
+
+def test_saddle_push_cancels_honest_escape_component():
+    """With boost = n_b/n_h-normalized cancellation, the aggregated mean
+    over all workers has zero component along the planted directions and
+    the honest bulk component survives."""
+    task = sad.make_saddle_task(10, "saddle_quad", seed=2)
+    atk = atk_lib.make_saddle_push(task.dirs, boost_init=1.0)
+    m = 10
+    byz = jnp.arange(m) < 4
+    g = jax.random.normal(jax.random.PRNGKey(0), (m, 10))
+    state = atk.init({"x": jnp.zeros((10,))})
+    out, _ = atk.act({"x": g}, byz, state, jnp.int32(0), jax.random.PRNGKey(1))
+    mixed = np.asarray(out["x"])
+    honest_mean = np.asarray(g)[4:].mean(axis=0)
+    total_mean = mixed.mean(axis=0)
+    q = np.asarray(task.dirs)
+    # escape component cancelled, bulk untouched
+    np.testing.assert_allclose(q @ total_mean, 0.0, atol=1e-6)
+    bulk = lambda v: v - q.T @ (q @ v)  # noqa: E731
+    np.testing.assert_allclose(bulk(total_mean), bulk(honest_mean),
+                               atol=1e-6)
+    # honest rows pass through untouched
+    np.testing.assert_array_equal(mixed[4:], np.asarray(g)[4:])
+
+
+def test_saddle_push_boost_ramps_on_null_feedback():
+    """Against a filterless defense the boost controller sees null
+    feedback and ramps toward its cap; a fresh eviction halves it."""
+    task = sad.make_saddle_task(6, "saddle_quad")
+    atk = atk_lib.make_saddle_push(task.dirs, boost_init=1.0)
+    byz = jnp.arange(6) < 2
+    state = atk.init({"x": jnp.zeros((6,))})
+    null = atk_lib.null_feedback(6)
+    for _ in range(60):
+        state = atk.observe(state, null, byz)
+    assert float(state["boost"]) == pytest.approx(8.0)   # boost_max
+    caught = dict(null, good=jnp.arange(6) >= 2)         # fresh evictions
+    state = atk.observe(state, caught, byz)
+    assert float(state["boost"]) == pytest.approx(4.0)
+
+
+# --------------------------------------------- theorem-level separation
+
+
+@pytest.mark.slow
+def test_escape_time_separation_regression():
+    """The paper's headline separation, locked as a regression: on the
+    chained planted-saddle task SafeguardSGD with the sgd_escape
+    perturbation escapes within the theorem's predicted step budget on
+    every seed — clean AND under the curvature-aware saddle_push
+    colluders — while the undefended mean under saddle_push never
+    escapes (the colluders cancel the escape component and the iterate
+    stays pinned at the strict saddle, min_eig_proxy = -gap)."""
+    kind, steps, seeds = "saddle_chain", 500, 3
+    gap, lr, nu = 1.0, 0.1, 0.1
+    task = sad.make_saddle_task(16, kind)
+    budget = sad.escape_budget(task, gap, lr, u0=lr * nu / 2)
+    assert budget <= steps
+
+    def cells(dfn, atk_name, pert):
+        return [common.saddle_scenario_for(
+            kind, steps=steps, seed=k, gap=gap, noise_r=0.05, lr=lr,
+            defense_name=dfn, attack_name=atk_name, perturb=pert,
+            escape_nu=nu, adapt_init=1.0) for k in range(seeds)]
+
+    sg_clean = cells("safeguard_double", "none", "sgd_escape")
+    sg_atk = cells("safeguard_double", "saddle_push", "sgd_escape")
+    mean_atk = cells("mean", "saddle_push", "none")
+    res = engine.run_scenarios(sg_clean + sg_atk + mean_atk)
+
+    for s in sg_clean + sg_atk:
+        rec = res[scenario_id(s)]
+        assert 0 < rec["escape_step"] <= budget, (s.attack, s.seed,
+                                                  rec["escape_step"], budget)
+        assert rec["min_eig_final"] >= 0.0      # at an approx local min
+    for s in sg_atk:                            # colluders evicted
+        assert res[scenario_id(s)]["caught_byz"] == common.N_BYZ, s.seed
+    for s in mean_atk:                          # provable stall
+        rec = res[scenario_id(s)]
+        assert rec["escape_step"] == -1, s.seed
+        assert rec["acc"] == 0.0
+        # pinned in the noise ball around the strict saddle: the planted
+        # curvature still reads ~ -gap (vs >= 0 after an escape)
+        assert rec["min_eig_final"] == pytest.approx(-gap, abs=1e-2)
