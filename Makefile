@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast bench-quick bench-overhead campaign-smoke \
 	adaptive-smoke defense-smoke hetero-smoke saddle-smoke lint \
-	dryrun-smoke
+	dryrun-smoke obs-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -50,6 +50,23 @@ saddle-smoke:
 	$(PY) -m repro.campaign.run --campaign saddle --quick --seeds 1
 	$(PY) -m repro.campaign.run --campaign saddle --quick --seeds 1 \
 	    | grep -q "new_cells=0"
+
+# the CI observability step (DESIGN.md §15): tiny traced campaign ->
+# forensics report; assert (1) stored event logs bit-match events
+# recomputed from the raw .npz trace arrays, (2) a resume run leaves the
+# trace sidecars byte-identical
+obs-smoke:
+	rm -rf /tmp/obs-smoke && mkdir -p /tmp/obs-smoke
+	$(PY) -m repro.campaign.run --campaign smoke --quick --seeds 1 \
+	    --root /tmp/obs-smoke --store-traces
+	$(PY) -m repro.obs.report --campaign smoke --root /tmp/obs-smoke \
+	    --check-events
+	$(PY) -m repro.obs.report --campaign smoke --root /tmp/obs-smoke \
+	    --out /tmp/obs-smoke/report.md && head -8 /tmp/obs-smoke/report.md
+	md5sum /tmp/obs-smoke/smoke/traces/*.npz > /tmp/obs-smoke/traces.md5
+	$(PY) -m repro.campaign.run --campaign smoke --quick --seeds 1 \
+	    --root /tmp/obs-smoke --store-traces | grep -q "new_cells=0"
+	md5sum -c --quiet /tmp/obs-smoke/traces.md5
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

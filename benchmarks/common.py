@@ -256,6 +256,26 @@ def run_saddle_loop(kind: str, *, steps: int = 120, lr: float = 0.1,
     return out
 
 
+def profile_cell(scn: Scenario, *, repeats: int = 3) -> Dict:
+    """Wall-clock phase attribution for one engine cell (DESIGN.md §15):
+    AOT compile vs execute seconds plus loop-aware HLO cost attribution
+    (``launch.hlo_analysis``) for the whole scan-rolled trial program.
+
+    The trial is compiled ahead of time (``jit(...).lower(...).
+    compile()``) so compile time is measured apart from the first
+    execution — the plain-jit path hides it in first dispatch."""
+    from repro.obs import profile as prof
+    trial = campaign_engine.make_trial_fn(scn)
+    knobs = campaign_engine.stack_knobs([scn])
+    one = {k: v[0] for k, v in knobs.items()}
+    rec = prof.profile_compiled(trial, one, repeats=repeats)
+    out = rec.pop("_out")
+    rec["acc"] = float(jax.device_get(out["acc"]))
+    rec["steps"] = int(scn.steps)
+    rec["us_per_step"] = round(1e6 * rec["execute_s"] / scn.steps, 3)
+    return rec
+
+
 def ideal_accuracy(task, *, steps=150, lr=0.1, batch=60, seed=0) -> float:
     """SGD on honest workers only — the paper's 'ideal accuracy'."""
     opt = make_optimizer(TrainConfig(lr=lr))

@@ -2,12 +2,19 @@
 ~sqrt(t) for honest workers but ~linearly for a variance attacker.  We fit
 the growth exponent of both and report the ratio.
 
-The per-step, per-worker statistic comes straight out of the campaign
-engine's traces (``dist_to_med_B``, published by the safeguard through
-the Defense info and traced by the trainer — DESIGN.md §13's trace
-layer): one scan-rolled trial, no hand-rolled training loop.  Eviction
-is disabled by a huge threshold floor so the statistic stays observable
-for the whole run.
+Two cells, both straight off the campaign engine:
+
+* **growth cell** — eviction disabled by a huge threshold floor so the
+  statistic stays observable all run; the per-step, per-worker
+  ``dist_to_med_B`` comes from the engine's traces (DESIGN.md §13) and
+  the exponents are fit on it, as before.
+* **detection cell** — eviction *enabled*; instead of re-deriving
+  eviction steps from raw trace arrays, this is the first consumer of
+  the flight recorder's event layer (DESIGN.md §15): the engine record
+  already carries the extracted event log, and ``obs.events.summarize``
+  reports each colluder's eviction step, triggering guard, and the
+  distance/threshold pair that fired — cross-checked against the
+  trainer's own ``caught_byz`` trace via ``obs.events.caught_curve``.
 """
 
 from __future__ import annotations
@@ -19,20 +26,25 @@ import numpy as np
 
 from repro.campaign import engine
 from repro.campaign.scenario import Scenario, scenario_id
+from repro.obs import events as ev_lib
 from benchmarks import common
 
 
 def run(steps: int = 200, out_dir: str = "experiments/bench"):
-    scn = Scenario(attack="variance", defense="safeguard_double",
-                   steps=steps, lr=0.05, m=common.M, n_byz=common.N_BYZ,
-                   # disable eviction (huge windows + floor) so the
-                   # statistic is observable all run
-                   T0=10 ** 6, T1=10 ** 6, threshold_floor=10 ** 6)
-    rec = engine.run_scenarios([scn])[scenario_id(scn)]
+    growth = Scenario(attack="variance", defense="safeguard_double",
+                      steps=steps, lr=0.05, m=common.M, n_byz=common.N_BYZ,
+                      # disable eviction (huge windows + floor) so the
+                      # statistic is observable all run
+                      T0=10 ** 6, T1=10 ** 6, threshold_floor=10 ** 6)
+    detect = Scenario(attack="variance", defense="safeguard_double",
+                      steps=steps, lr=0.05, m=common.M, n_byz=common.N_BYZ)
+    res = engine.run_scenarios([growth, detect])
+
+    # -- growth exponents (eviction-disabled cell) -------------------------
+    rec = res[scenario_id(growth)]
     dist = np.asarray(rec["traces"]["dist_to_med_B"])      # (steps, m)
     arr = np.stack([dist[:, :common.N_BYZ].mean(axis=1),
                     dist[:, common.N_BYZ:].mean(axis=1)], axis=1)
-
     ts = np.arange(10, steps)
     fit = {}
     for j, name in enumerate(("byz", "honest")):
@@ -42,10 +54,29 @@ def run(steps: int = 200, out_dir: str = "experiments/bench"):
         fit[name] = float(slope)
         print(f"fig2a,{name}_growth_exponent,{slope:.3f}")
     print(f"fig2a,exponent_ratio,{fit['byz'] / max(fit['honest'], 1e-9):.2f}")
+
+    # -- detection forensics (eviction-enabled cell, event layer) ----------
+    drec = res[scenario_id(detect)]
+    events = ev_lib.events_from_json(drec["events"])
+    summ = ev_lib.summarize(events, n_byz=common.N_BYZ, m=common.M)
+    for k, c in summ["caught"].items():
+        print(f"fig2a,evicted,worker={k},step={c['step']},"
+              f"guard={c['guard']},dist={c['dist']:.4g},"
+              f"threshold={c['threshold']:.4g}")
+    print(f"fig2a,detection_latency,"
+          f"{summ['detection_latency_first']}..{summ['detection_latency_last']}")
+    print(f"fig2a,false_evictions,{summ['n_false_evictions']}")
+    # the event replay must agree with the trainer's own timeline
+    curve = ev_lib.caught_curve(events, common.N_BYZ, common.M, steps)
+    trainer_curve = np.asarray(drec["traces"]["caught_byz"])
+    assert np.array_equal(curve, trainer_curve), \
+        "event-layer caught curve diverges from the trainer's caught_byz"
+
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig2a.json"), "w") as f:
-        json.dump({"trajectory": arr.tolist(), "exponents": fit}, f)
-    return fit
+        json.dump({"trajectory": arr.tolist(), "exponents": fit,
+                   "detection": summ}, f)
+    return {"exponents": fit, "detection": summ}
 
 
 if __name__ == "__main__":

@@ -12,6 +12,8 @@ measurement (``name,...``) and writes JSON artifacts under
   overhead        master aggregation O(md) cost per defense
   campaign        campaign engine throughput: per-loop Trainer trials vs
                   the scan+vmap engine (BENCH_campaign_throughput.json)
+  trace_overhead  flight-recorder cost: full-schema trace capture vs
+                  trace_zeta=False (BENCH_trace_overhead.json)
   kernels         Pallas kernels (interpret) vs jnp reference
   roofline        three-term roofline per (arch x shape) from the dry runs
 """
@@ -34,7 +36,8 @@ def main() -> None:
 
     from benchmarks import (table1_attack_grid, fig2_detection, fig2_reset,
                             convex_attack, saddle_escape, overhead,
-                            campaign_throughput, bench_kernels, roofline)
+                            campaign_throughput, bench_kernels, roofline,
+                            trace_overhead)
     jobs = {
         "table1": lambda: table1_attack_grid.run(steps=steps),
         "fig2a": lambda: fig2_detection.run(steps=max(steps, 120)),
@@ -45,6 +48,8 @@ def main() -> None:
             seeds=2 if args.quick else 3),
         "overhead": lambda: overhead.run(quick=args.quick),
         "campaign": lambda: campaign_throughput.run(quick=args.quick),
+        "trace_overhead": lambda: trace_overhead.run(
+            steps=60 if args.quick else 150),
         "kernels": bench_kernels.run,
         "roofline": roofline.run,
     }

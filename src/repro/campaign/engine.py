@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.campaign.scenario import Scenario, scenario_id
 from repro.configs.base import TrainConfig
@@ -51,6 +52,7 @@ from repro.data import hetero as het_lib
 from repro.data import saddle as sad_lib
 from repro.data import tasks
 from repro.data.pipeline import flip_labels, worker_split
+from repro.obs import events as ev_lib
 from repro.optim import make_optimizer
 from repro.train import init_train_state, make_train_step, scan_trial
 
@@ -395,6 +397,12 @@ def _lane_record(lane: Dict) -> Dict:
         rec["escape_step"] = sad_lib.first_escape_step(traces["escaped"])
         rec["min_eig_final"] = float(
             jnp.asarray(traces["min_eig_proxy"])[-1])
+    # flight-recorder event log (DESIGN.md §15): the dense traces are
+    # already host-side numpy here, so the pure-numpy extractor runs for
+    # free; events are small and always stored with the record (traces
+    # themselves stay opt-in via store_traces)
+    host_traces = {k: np.asarray(v) for k, v in traces.items()}
+    rec["events"] = ev_lib.events_to_json(ev_lib.extract_events(host_traces))
     rec["traces"] = traces
     return rec
 

@@ -182,7 +182,9 @@ def main(argv=None) -> Dict:
     ap.add_argument("--root", default=DEFAULT_ROOT,
                     help="store root (experiments/campaigns)")
     ap.add_argument("--store-traces", action="store_true",
-                    help="persist per-step metric traces in the store")
+                    help="persist per-step metric traces as compressed "
+                         ".npz sidecars under <store>/traces/ "
+                         "(repro.obs.trace; event logs are always stored)")
     ap.add_argument("--loop", action="store_true",
                     help="run lanes unbatched (debugging / A-B timing)")
     args = ap.parse_args(argv)

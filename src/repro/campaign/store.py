@@ -17,8 +17,13 @@ The store is content-addressed by :func:`scenario.scenario_id`, so
   the last record.
 
 Result payloads are scalars by default; per-step traces are optional
-(``store_traces=True`` on :meth:`CampaignStore.append`) since a trace is
-``steps`` floats per metric per cell.
+(``store_traces=True`` on :meth:`CampaignStore.append`).  Traces live in
+compressed ``.npz`` sidecars under ``traces/<scenario_id>.npz``
+(``repro.obs.trace``) — the JSONL record carries only the sidecar's
+relative path and field list, plus the cell's extracted event log
+(``repro.obs.events``), which is small.  :meth:`CampaignStore.
+load_traces` reads sidecars and falls back to the legacy JSONL-inlined
+``result["traces"]`` dicts of pre-obs campaigns.
 """
 
 from __future__ import annotations
@@ -30,27 +35,45 @@ from typing import Dict, Iterable, List, Optional, Sequence
 import numpy as np
 
 from repro.campaign.scenario import Scenario, scenario_id
+from repro.obs import trace as trace_lib
 
 DEFAULT_ROOT = os.path.join("experiments", "campaigns")
 
 
-def _jsonify(x):
-    """numpy / jax scalars and arrays -> plain json types."""
+def _jsonify(x, _path: str = "$"):
+    """numpy / jax scalars and arrays -> plain json types.
+
+    Total over the types a result payload may legally contain; anything
+    else (a function, a Scenario, a device buffer that isn't
+    array-like) raises :class:`TypeError` naming the offending path —
+    an unknown type passed through silently used to serialize as its
+    ``repr`` or crash ``json.dumps`` a layer later, pointing at nothing.
+
+    NaN / ±inf are kept as floats: the store uses python's json module,
+    which round-trips them (``NaN``/``Infinity`` literals)."""
+    if x is None or isinstance(x, str):
+        return x
     if isinstance(x, dict):
-        return {k: _jsonify(v) for k, v in x.items()}
+        return {str(k): _jsonify(v, f"{_path}.{k}") for k, v in x.items()}
     if isinstance(x, (list, tuple)):
-        return [_jsonify(v) for v in x]
+        return [_jsonify(v, f"{_path}[{i}]") for i, v in enumerate(x)]
     if isinstance(x, np.ndarray):
-        return _jsonify(x.tolist())
+        return _jsonify(x.tolist(), _path)
+    # bool before int: bool is a subclass of int, np.bool_ of np.generic
     if isinstance(x, (np.bool_, bool)):
         return bool(x)
     if isinstance(x, (np.integer, int)):
         return int(x)
     if isinstance(x, (np.floating, float)):
         return float(x)
-    if hasattr(x, "tolist"):          # jax arrays
-        return _jsonify(np.asarray(x).tolist())
-    return x
+    if isinstance(x, np.generic):     # remaining numpy scalar kinds
+        return _jsonify(x.item(), _path)
+    if hasattr(x, "tolist"):          # jax arrays (incl. 0-d)
+        return _jsonify(np.asarray(x).tolist(), _path)
+    raise TypeError(
+        f"_jsonify: {_path} has unserializable type {type(x).__name__}; "
+        "result payloads may only contain json scalars, lists/dicts, and "
+        "numpy/jax arrays")
 
 
 class CampaignStore:
@@ -87,13 +110,26 @@ class CampaignStore:
         done = self.completed_ids()
         return [s for s in scenarios if scenario_id(s) not in done]
 
+    def load_traces(self, sid: str) -> Optional[Dict[str, np.ndarray]]:
+        """A cell's dense traces: ``.npz`` sidecar if the record names
+        one, legacy JSONL-inlined dict otherwise, None if untraced."""
+        rec = self.load().get(sid)
+        if rec is None:
+            return None
+        return trace_lib.load_cell_traces(self.dir, rec)
+
     # -- writing -----------------------------------------------------------
 
     def append(self, scenario: Scenario, result: Dict, *,
                store_traces: bool = False) -> str:
         sid = scenario_id(scenario)
-        payload = {k: v for k, v in result.items()
-                   if k != "traces" or store_traces}
+        payload = {k: v for k, v in result.items() if k != "traces"}
+        if store_traces and "traces" in result:
+            # dense traces go to a compressed sidecar, not the JSONL:
+            # the record carries only the pointer + field list
+            payload["trace_file"] = trace_lib.save_traces(
+                self.dir, sid, result["traces"])
+            payload["trace_fields"] = sorted(result["traces"])
         rec = {"id": sid, "scenario": scenario.asdict(),
                "result": _jsonify(payload)}
         with open(self.path, "a") as f:

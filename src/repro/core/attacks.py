@@ -334,6 +334,25 @@ class Attack:
         return self.observe is not None
 
 
+# Every adaptive controller keeps exactly one scalar "level" — the knob
+# its observe() loop actually steers (aggression, z, scale, eps, boost).
+# One of these keys per state dict, checked in this order.
+_LEVEL_KEYS = ("aggr", "z", "scale", "eps", "boost")
+
+
+def controller_level(state) -> Optional[jax.Array]:
+    """The adaptive controller's scalar level from its state dict, or
+    ``None`` for stateless / non-dict states.  This is what the obs
+    layer traces as the ``attack_level`` metric: its direction reversals
+    are the attack's observable phase boundaries (ramp <-> retreat)."""
+    if not isinstance(state, dict):
+        return None
+    for key in _LEVEL_KEYS:
+        if key in state:
+            return jnp.asarray(state[key], f32)
+    return None
+
+
 # --------------------------------------------------------------------------
 # Feedback-coupled adaptive attacks.  All state leaves are fixed-shape
 # f32 scalars, so the state pytree scans and vmaps unchanged.  Every

@@ -1,0 +1,36 @@
+"""Flight recorder: typed schemas, trace artifacts, decision events,
+forensics reports, and phase profiling (DESIGN.md §15).
+
+Layers:
+
+* :mod:`repro.obs.schema`  — typed metric/info registry + trace-time
+  validation (:func:`validate_metrics`, :func:`validate_info`);
+* :mod:`repro.obs.trace`   — compressed ``.npz`` trace sidecars keyed by
+  scenario hash, with back-compat reads of JSONL-inlined traces;
+* :mod:`repro.obs.events`  — pure-numpy dense-trace -> event-log
+  extraction (evictions, restorations, threshold crossings, escape
+  firings, attack phase changes) plus replay/summary primitives;
+* :mod:`repro.obs.report`  — ``python -m repro.obs.report`` forensics
+  CLI ("why was worker k evicted at step t") + markdown campaign
+  reports;
+* :mod:`repro.obs.profile` — wall-clock phase attribution (compile vs
+  execute vs defense) with ``launch.hlo_analysis`` cost attribution.
+"""
+
+from repro.obs.schema import (MetricSpec, SchemaError, INFO, METRICS,
+                              register_metric, spec_of,
+                              validate_info, validate_metrics)
+from repro.obs.trace import (load_cell_traces, load_trace_file,
+                             save_traces, trace_path, trace_relpath)
+from repro.obs.events import (Event, caught_curve, eviction_record,
+                              events_from_json, events_to_json,
+                              extract_events, replay_good, summarize)
+
+__all__ = [
+    "MetricSpec", "SchemaError", "INFO", "METRICS", "register_metric",
+    "spec_of", "validate_info", "validate_metrics",
+    "load_cell_traces", "load_trace_file", "save_traces", "trace_path",
+    "trace_relpath",
+    "Event", "caught_curve", "eviction_record", "events_from_json",
+    "events_to_json", "extract_events", "replay_good", "summarize",
+]

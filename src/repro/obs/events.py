@@ -1,0 +1,261 @@
+"""Dense traces -> discrete decision events — layer 2 of the flight
+recorder (DESIGN.md §15).
+
+The campaign engine's per-step traces are *dense*: ``(steps,)`` scalars
+and ``(steps, m)`` per-worker arrays.  Diagnosing a defense decision
+("why was worker 3 evicted at step 41?", "when did the attack controller
+change phase?") means scanning those arrays for transitions — logic that
+was previously re-implemented ad hoc by every benchmark that needed it.
+This module is the single extractor: pure numpy (no jax — it runs on
+host-side trace pytrees and ``.npz`` sidecars alike), deterministic, and
+bit-stable, so an event log persisted at campaign time can be re-derived
+from the raw trace arrays and compared for exact equality (the
+``obs-smoke`` integrity check).
+
+Event taxonomy (``kind``):
+
+  ``eviction``            ``good[t-1, k] & ~good[t, k]`` — worker ``k``
+                          left the good set at step ``t``.  ``guard``
+                          names the guard window whose threshold the
+                          worker's distance violated (``B``, ``A``,
+                          ``BA`` when both, ``""`` when the defense
+                          publishes no distances); ``value`` /
+                          ``threshold`` are the triggering statistic and
+                          the live threshold.
+  ``restoration``         ``~good[t-1, k] & good[t, k]`` — periodic
+                          reset readmitted worker ``k``.
+  ``threshold_crossing``  worker ``k``'s distance-to-median rose from
+                          ``< threshold`` to ``>= threshold`` on guard
+                          ``B``/``A`` (rising edges only; for a
+                          single-guard safeguard the duplicated A-guard
+                          surface is suppressed).
+  ``escape_fire``         the sgd_escape perturbation gate rose 0 -> 1
+                          (``value`` = the aggregate norm that gated
+                          it); worker = -1 (global).
+  ``attack_phase_change`` the adaptive-attack controller level reversed
+                          direction (ramp <-> retreat), the observable
+                          phase boundary of the §11 feedback loop;
+                          worker = -1, ``value`` = the new level.
+
+Steps index the trace arrays (0-based, one entry per training step);
+``good[t]`` is the post-decision mask of step ``t``, so an eviction
+event at ``t`` carries the statistics of the very filter call that
+evicted.  A worker restored and re-evicted in the same step never
+appears as a ``good`` transition — the scalar ``restored`` metric still
+counts it (documented limitation; the per-worker reset flag is on the
+info surface, not the trace)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+GLOBAL = -1                       # worker id of global (non-worker) events
+
+# deterministic intra-step ordering of kinds
+_KIND_ORDER = ("restoration", "threshold_crossing", "eviction",
+               "escape_fire", "attack_phase_change")
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    kind: str
+    step: int
+    worker: int = GLOBAL
+    guard: str = ""               # "B" | "A" | "BA" | ""
+    value: float = float("nan")   # triggering statistic
+    threshold: float = float("nan")  # live threshold (nan when n/a)
+
+    def asdict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def events_to_json(events: List[Event]) -> List[Dict]:
+    return [e.asdict() for e in events]
+
+
+def events_from_json(records: List[Dict]) -> List[Event]:
+    return [Event(**r) for r in records]
+
+
+def _sorted(events: List[Event]) -> List[Event]:
+    return sorted(events, key=lambda e: (e.step, _KIND_ORDER.index(e.kind),
+                                         e.worker, e.guard))
+
+
+def _f(x) -> float:
+    """Exact float widening (f32 -> f64 is lossless, so json round-trips
+    bit-identically)."""
+    return float(x)
+
+
+def _good_timeline(traces: Dict) -> Optional[np.ndarray]:
+    good = traces.get("good")
+    if good is None:
+        return None
+    return np.asarray(good).astype(bool)           # (steps, m)
+
+
+def _guard_surfaces(traces: Dict) -> List[str]:
+    """Guard windows with a usable distance/threshold surface.  A
+    single-guard safeguard publishes the B statistics twice (A is a
+    duplicate) — suppress the mirror so events aren't double-counted."""
+    out = []
+    for g in ("B", "A"):
+        if (f"dist_to_med_{g}" in traces
+                and f"threshold_{g}" in traces):
+            out.append(g)
+    if out == ["B", "A"]:
+        same = (np.array_equal(traces["dist_to_med_B"],
+                               traces["dist_to_med_A"])
+                and np.array_equal(traces["threshold_B"],
+                                   traces["threshold_A"]))
+        if same:
+            out = ["B"]
+    return out
+
+
+def extract_events(traces: Dict) -> List[Event]:
+    """Dense host-side trace dict -> ordered discrete event log.
+
+    Tolerant of missing surfaces: a stateless defense has no ``good``
+    trace (no eviction events), a non-safeguard filter has no
+    distance/threshold surfaces (evictions carry ``guard=""``), a
+    non-adaptive attack has no ``attack_level``."""
+    traces = {k: np.asarray(v) for k, v in traces.items()}
+    events: List[Event] = []
+    guards = _guard_surfaces(traces)
+
+    good = _good_timeline(traces)
+    if good is not None:
+        steps, m = good.shape
+        prev = np.ones((m,), bool)                 # everyone starts good
+        for t in range(steps):
+            evicted = prev & ~good[t]
+            restoredv = ~prev & good[t]
+            for k in np.flatnonzero(restoredv):
+                events.append(Event("restoration", t, int(k)))
+            for k in np.flatnonzero(evicted):
+                trig, val, th = "", float("nan"), float("nan")
+                for g in guards:
+                    d = _f(traces[f"dist_to_med_{g}"][t, k])
+                    thr = _f(traces[f"threshold_{g}"][t])
+                    if d >= thr:
+                        trig += g
+                        if len(trig) == 1:         # first guard wins value
+                            val, th = d, thr
+                events.append(Event("eviction", t, int(k), trig, val, th))
+            prev = good[t]
+
+    for g in guards:
+        dist = traces[f"dist_to_med_{g}"]          # (steps, m)
+        th = traces[f"threshold_{g}"][:, None]     # (steps, 1)
+        over = dist >= th
+        rising = over & ~np.vstack([np.zeros_like(over[:1]), over[:-1]])
+        for t, k in zip(*np.nonzero(rising)):
+            events.append(Event("threshold_crossing", int(t), int(k), g,
+                                _f(dist[t, k]), _f(th[t, 0])))
+
+    esc = traces.get("escape_on")
+    if esc is not None:
+        on = np.asarray(esc) > 0.5
+        rising = on & ~np.concatenate([[False], on[:-1]])
+        gnorm = traces.get("grad_norm")
+        for t in np.flatnonzero(rising):
+            val = _f(gnorm[t]) if gnorm is not None else float("nan")
+            events.append(Event("escape_fire", int(t), GLOBAL, "", val))
+
+    level = traces.get("attack_level")
+    if level is not None:
+        lv = np.asarray(level, np.float64)
+        d = np.sign(np.diff(lv))
+        prev_dir = 0.0
+        for t in range(1, lv.size):
+            cur = d[t - 1]
+            if cur != 0.0:
+                if prev_dir != 0.0 and cur != prev_dir:
+                    events.append(Event("attack_phase_change", int(t),
+                                        GLOBAL, "", _f(lv[t])))
+                prev_dir = cur
+
+    return _sorted(events)
+
+
+# --------------------------------------------------------------------------
+# Replay + summaries (the forensics primitives reports build on)
+# --------------------------------------------------------------------------
+
+def replay_good(events: List[Event], m: int, steps: int) -> np.ndarray:
+    """Reconstruct the ``(steps, m)`` good-mask timeline from the event
+    log alone.  ``replay_good(extract_events(traces), ...)`` must equal
+    ``traces["good"]`` exactly — the obs-smoke integrity invariant."""
+    good = np.ones((m,), bool)
+    out = np.empty((steps, m), bool)
+    by_step: Dict[int, List[Event]] = {}
+    for e in events:
+        if e.kind in ("eviction", "restoration"):
+            by_step.setdefault(e.step, []).append(e)
+    for t in range(steps):
+        for e in by_step.get(t, ()):
+            good[e.worker] = e.kind == "restoration"
+        out[t] = good
+    return out
+
+
+def caught_curve(events: List[Event], n_byz: int, m: int, steps: int
+                 ) -> np.ndarray:
+    """Per-step count of evicted Byzantine workers (rows ``< n_byz``),
+    replayed from events — must match the trainer's ``caught_byz``
+    trace exactly."""
+    good = replay_good(events, m, steps)
+    return (~good[:, :n_byz]).sum(axis=1).astype(np.int64)
+
+
+def eviction_record(events: List[Event], worker: int,
+                    step: Optional[int] = None) -> Optional[Event]:
+    """The eviction event of ``worker`` (at ``step``, or its first)."""
+    for e in events:
+        if e.kind == "eviction" and e.worker == worker:
+            if step is None or e.step == step:
+                return e
+    return None
+
+
+def summarize(events: List[Event], *, n_byz: int, m: int) -> Dict:
+    """Per-cell forensic summary: first eviction step per worker, the
+    caught colluders (byzantine rows are ``< n_byz`` by the engine's
+    convention), detection latency, false evictions, restorations."""
+    first_evicted: Dict[int, Event] = {}
+    restorations = 0
+    phase_changes = 0
+    escape_fires = 0
+    for e in events:
+        if e.kind == "eviction" and e.worker not in first_evicted:
+            first_evicted[e.worker] = e
+        elif e.kind == "restoration":
+            restorations += 1
+        elif e.kind == "attack_phase_change":
+            phase_changes += 1
+        elif e.kind == "escape_fire":
+            escape_fires += 1
+    caught = {k: e for k, e in first_evicted.items() if k < n_byz}
+    false_ev = {k: e for k, e in first_evicted.items() if k >= n_byz}
+    latencies = [e.step for e in caught.values()]
+    return {
+        "caught": {k: {"step": e.step, "guard": e.guard,
+                       "dist": e.value, "threshold": e.threshold}
+                   for k, e in sorted(caught.items())},
+        "false_evictions": {k: e.step for k, e in sorted(false_ev.items())},
+        "n_caught": len(caught),
+        "n_false_evictions": len(false_ev),
+        "false_eviction_rate": (len(false_ev) / (m - n_byz)
+                                if m > n_byz else 0.0),
+        "detection_latency_first": min(latencies) if latencies else None,
+        "detection_latency_last": max(latencies) if latencies else None,
+        "restorations": restorations,
+        "attack_phase_changes": phase_changes,
+        "escape_fires": escape_fires,
+        "n_events": len(events),
+    }

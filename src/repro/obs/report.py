@@ -1,0 +1,299 @@
+"""Forensics CLI — layer 3 of the flight recorder (DESIGN.md §15).
+
+``python -m repro.obs.report`` reads a campaign directory (the JSONL
+store + ``.npz`` trace sidecars) and answers the questions raw traces
+can't without scripting:
+
+  # per-campaign markdown report (detection latency, false evictions,
+  # caught-fraction curves, event counts per cell)
+  python -m repro.obs.report --campaign smoke
+
+  # single-cell forensics: why was worker 4 evicted at step 37?
+  python -m repro.obs.report --campaign smoke --cell <scenario-id> \
+      --worker 4
+
+  # integrity: assert stored event logs bit-match events re-derived
+  # from the raw trace arrays (the obs-smoke invariant)
+  python -m repro.obs.report --campaign smoke --check-events
+
+``--cell`` accepts a scenario-id prefix (like git).  The eviction
+forensics reconstruct both guards' distance-vs-live-threshold
+neighborhoods around the event, so the report shows the approach to the
+threshold, the crossing, and the margin — not just the verdict."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.campaign.store import DEFAULT_ROOT, CampaignStore
+from repro.obs import events as ev_lib
+from repro.obs import trace as trace_lib
+
+
+def _cell_label(rec: Dict) -> str:
+    s = rec.get("scenario", {})
+    bits = [s.get("attack", "?"), s.get("defense", "?"),
+            f"seed={s.get('seed', '?')}"]
+    for k in ("n_byz", "hetero_alpha", "knob"):
+        if s.get(k) not in (None, 0):
+            bits.append(f"{k}={s[k]}")
+    return "/".join(str(b) for b in bits)
+
+
+def _cell_events(store: CampaignStore, rec: Dict
+                 ) -> Optional[List[ev_lib.Event]]:
+    """Stored event log if the record carries one, else re-extracted
+    from the cell's traces (sidecar or legacy inline), else None."""
+    stored = rec.get("result", {}).get("events")
+    if stored is not None:
+        return ev_lib.events_from_json(stored)
+    traces = trace_lib.load_cell_traces(store.dir, rec)
+    if traces is None:
+        return None
+    return ev_lib.extract_events(traces)
+
+
+def _resolve_cell(records: Dict[str, Dict], prefix: str) -> Dict:
+    hits = [sid for sid in records if sid.startswith(prefix)]
+    if not hits:
+        raise SystemExit(f"no cell with id prefix {prefix!r}; have "
+                         f"{sorted(records)[:8]}...")
+    if len(hits) > 1:
+        raise SystemExit(f"ambiguous prefix {prefix!r}: {hits}")
+    return records[hits[0]]
+
+
+# --------------------------------------------------------------------------
+# Eviction forensics
+# --------------------------------------------------------------------------
+
+def eviction_forensics(traces: Dict[str, np.ndarray], worker: int,
+                       step: Optional[int] = None, radius: int = 5
+                       ) -> str:
+    """Markdown narrative: why was ``worker`` evicted (at ``step``, or
+    its first eviction)?  Reconstructs each guard's distance vs live
+    threshold in ``[step-radius, step+radius]``."""
+    events = ev_lib.extract_events(traces)
+    e = ev_lib.eviction_record(events, worker, step)
+    lines: List[str] = []
+    if e is None:
+        when = f" at step {step}" if step is not None else ""
+        lines.append(f"worker {worker} was never evicted{when}.")
+        guards = [g for g in ("B", "A") if f"dist_to_med_{g}" in traces]
+        if guards and f"dist_to_med_{guards[0]}" in traces:
+            g = guards[0]
+            d = np.asarray(traces[f"dist_to_med_{g}"])[:, worker]
+            th = np.asarray(traces[f"threshold_{g}"])
+            margin = (d / np.maximum(th, 1e-12)).max()
+            lines.append(f"closest approach on guard {g}: "
+                         f"{margin:.3f} of the live threshold.")
+        return "\n".join(lines)
+
+    lines.append(f"### worker {worker} evicted at step {e.step} "
+                 f"(guard {e.guard or 'n/a'})")
+    lines.append("")
+    if np.isfinite(e.value):
+        lines.append(f"triggering statistic: dist_to_med = {e.value:.6g} "
+                     f">= threshold {e.threshold:.6g} "
+                     f"(ratio {e.value / max(e.threshold, 1e-12):.3f})")
+        lines.append("")
+    lo = max(0, e.step - radius)
+    hi = min(next(iter(traces.values())).shape[0], e.step + radius + 1)
+    guards = []
+    for g in ("B", "A"):
+        if f"dist_to_med_{g}" in traces and f"threshold_{g}" in traces:
+            guards.append(g)
+    if guards:
+        hdr = "| step |"
+        sep = "|---|"
+        for g in guards:
+            hdr += f" dist_{g} | thresh_{g} | over_{g} |"
+            sep += "---|---|---|"
+        lines += [hdr, sep]
+        for t in range(lo, hi):
+            row = f"| {t}{' *' if t == e.step else ''} |"
+            for g in guards:
+                d = float(np.asarray(traces[f"dist_to_med_{g}"])[t, worker])
+                th = float(np.asarray(traces[f"threshold_{g}"])[t])
+                row += f" {d:.5g} | {th:.5g} | {'Y' if d >= th else ''} |"
+            lines.append(row)
+        lines.append("")
+        lines.append(f"(* = eviction step; window [{lo}, {hi - 1}])")
+    restore = [x for x in events
+               if x.kind == "restoration" and x.worker == worker
+               and x.step > e.step]
+    if restore:
+        lines.append(f"later restored at step(s) "
+                     f"{[x.step for x in restore]} by periodic reset.")
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Campaign report
+# --------------------------------------------------------------------------
+
+def campaign_report(store: CampaignStore, records: Dict[str, Dict]) -> str:
+    lines = [f"# obs report — campaign `{store.name}`", "",
+             f"{len(records)} completed cell(s) in `{store.path}`.", ""]
+    traced, untraced = [], []
+    for sid, rec in sorted(records.items()):
+        events = _cell_events(store, rec)
+        (traced if events is not None else untraced).append((sid, rec,
+                                                            events))
+    if untraced:
+        lines.append(f"{len(untraced)} cell(s) have no traces/events "
+                     "(run the campaign with `--store-traces`); scalar "
+                     "results only.")
+        lines.append("")
+    if traced:
+        lines.append("| cell | scenario | events | caught | false ev. | "
+                     "first det. | last det. | restores |")
+        lines.append("|---|---|---|---|---|---|---|---|")
+    for sid, rec, events in traced:
+        s = rec.get("scenario", {})
+        n_byz = int(s.get("n_byz") or 0)
+        m = int(s.get("m") or 0)
+        summ = ev_lib.summarize(events, n_byz=n_byz, m=m)
+        lines.append(
+            f"| `{sid[:10]}` | {_cell_label(rec)} | {summ['n_events']} "
+            f"| {summ['n_caught']}/{n_byz} "
+            f"| {summ['n_false_evictions']} "
+            f"| {summ['detection_latency_first']} "
+            f"| {summ['detection_latency_last']} "
+            f"| {summ['restorations']} |")
+    for sid, rec, events in traced:
+        s = rec.get("scenario", {})
+        n_byz = int(s.get("n_byz") or 0)
+        m = int(s.get("m") or 0)
+        summ = ev_lib.summarize(events, n_byz=n_byz, m=m)
+        if not summ["caught"]:
+            continue
+        lines += ["", f"## cell `{sid[:10]}` — {_cell_label(rec)}", ""]
+        lines.append("| colluder | evicted at step | guard | dist | "
+                     "threshold |")
+        lines.append("|---|---|---|---|---|")
+        for k, c in summ["caught"].items():
+            lines.append(f"| worker {k} | {c['step']} | {c['guard']} "
+                         f"| {c['dist']:.6g} | {c['threshold']:.6g} |")
+        if n_byz and m:
+            steps = None
+            traces = trace_lib.load_cell_traces(store.dir, rec)
+            if traces is not None and "good" in traces:
+                steps = traces["good"].shape[0]
+            if steps:
+                curve = ev_lib.caught_curve(events, n_byz, m, steps)
+                marks = [int(np.argmax(curve >= k)) if (curve >= k).any()
+                         else None for k in range(1, n_byz + 1)]
+                lines.append("")
+                lines.append(f"caught-fraction curve: steps to catch "
+                             f"1..{n_byz} colluders = {marks}")
+    return "\n".join(lines) + "\n"
+
+
+# --------------------------------------------------------------------------
+# Integrity check (the obs-smoke invariant)
+# --------------------------------------------------------------------------
+
+def check_events(store: CampaignStore, records: Dict[str, Dict]) -> int:
+    """Assert stored event logs bit-match events re-derived from the raw
+    trace arrays.  Returns the number of cells checked."""
+    checked = 0
+    for sid, rec in sorted(records.items()):
+        stored = rec.get("result", {}).get("events")
+        traces = trace_lib.load_cell_traces(store.dir, rec)
+        if stored is None or traces is None:
+            continue
+        fresh = ev_lib.events_to_json(ev_lib.extract_events(traces))
+        # json round-trips exactly (f32 -> f64 widening is lossless),
+        # so dict equality here IS bit-equality of the event logs —
+        # modulo NaN, which json can't carry; compare via repr
+        canon = lambda evs: json.dumps(evs, sort_keys=True,
+                                       allow_nan=True)
+        if canon(fresh) != canon(stored):
+            raise SystemExit(
+                f"cell {sid}: stored event log does not match events "
+                f"recomputed from the raw traces\nstored:   "
+                f"{canon(stored)[:400]}\nrecomputed: {canon(fresh)[:400]}")
+        # and the event log must replay the trainer's own timeline
+        if "good" in traces:
+            steps, m = np.asarray(traces["good"]).shape
+            evs = ev_lib.events_from_json(stored)
+            if not np.array_equal(ev_lib.replay_good(evs, m, steps),
+                                  np.asarray(traces["good"]).astype(bool)):
+                raise SystemExit(f"cell {sid}: event replay diverges from "
+                                 "the traced good timeline")
+        checked += 1
+    return checked
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="forensics reports over campaign trace artifacts")
+    p.add_argument("--campaign", required=True,
+                   help="campaign name under the store root")
+    p.add_argument("--root", default=DEFAULT_ROOT,
+                   help=f"campaign store root (default {DEFAULT_ROOT})")
+    p.add_argument("--cell", default=None,
+                   help="scenario-id prefix for single-cell forensics")
+    p.add_argument("--worker", type=int, default=None,
+                   help="worker id: why was this worker evicted?")
+    p.add_argument("--step", type=int, default=None,
+                   help="restrict --worker forensics to this eviction step")
+    p.add_argument("--radius", type=int, default=5,
+                   help="neighborhood half-width around the event")
+    p.add_argument("--check-events", action="store_true",
+                   help="verify stored event logs bit-match re-extraction")
+    p.add_argument("--out", default=None,
+                   help="write the report here instead of stdout")
+    a = p.parse_args(argv)
+
+    store = CampaignStore(a.campaign, root=a.root)
+    records = store.load()
+    if not records:
+        print(f"no completed cells in {store.path}", file=sys.stderr)
+        return 1
+
+    if a.check_events:
+        n = check_events(store, records)
+        print(f"ok: {n} cell(s) with stored events bit-match re-extraction")
+        return 0 if n else 1
+
+    if a.worker is not None:
+        if a.cell is None:
+            raise SystemExit("--worker needs --cell")
+        rec = _resolve_cell(records, a.cell)
+        traces = trace_lib.load_cell_traces(store.dir, rec)
+        if traces is None:
+            raise SystemExit(f"cell {rec['id']} has no traces; re-run the "
+                             "campaign with --store-traces")
+        text = eviction_forensics(traces, a.worker, a.step,
+                                  radius=a.radius)
+    elif a.cell is not None:
+        rec = _resolve_cell(records, a.cell)
+        events = _cell_events(store, rec)
+        if events is None:
+            raise SystemExit(f"cell {rec['id']} has no traces/events")
+        s = rec.get("scenario", {})
+        summ = ev_lib.summarize(events, n_byz=int(s.get("n_byz") or 0),
+                                m=int(s.get("m") or 0))
+        text = json.dumps(summ, indent=1, default=str) + "\n"
+    else:
+        text = campaign_report(store, records)
+
+    if a.out:
+        with open(a.out, "w") as f:
+            f.write(text)
+        print(f"wrote {a.out}")
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

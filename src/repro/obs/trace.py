@@ -1,0 +1,86 @@
+"""Trace artifacts: compressed ``.npz`` sidecars for per-step traces.
+
+A traced campaign cell produces ``steps`` floats per scalar metric and
+``steps * m`` per per-worker metric.  Inlining that into the campaign
+JSONL (the pre-obs ``store_traces`` path) bloated ``results.jsonl`` by
+orders of magnitude and forced every reader through ``json.loads`` of
+megabyte lines.  Sidecars fix both: one ``np.savez_compressed`` archive
+per cell, keyed by the content-addressed scenario hash, living next to
+the JSONL under
+
+    experiments/campaigns/<name>/traces/<scenario_id>.npz
+
+The JSONL record stays small — it carries ``trace_file`` (the relative
+sidecar path) and ``trace_fields`` (the stored keys) so a resumed or
+copied campaign can locate its artifacts without globbing.  Readers go
+through :func:`CampaignStore.load_traces`, which falls back to the
+legacy inlined ``result["traces"]`` dict for JSONLs written before this
+layer existed.
+
+Arrays round-trip exactly: ``savez`` preserves dtype and shape, so the
+obs-smoke integrity check (event log re-derived from the sidecar must
+bit-match the log derived from the in-memory traces) is meaningful."""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+TRACE_SUBDIR = "traces"
+
+
+def trace_relpath(sid: str) -> str:
+    """Sidecar path relative to the campaign directory."""
+    return os.path.join(TRACE_SUBDIR, f"{sid}.npz")
+
+
+def trace_path(campaign_dir: str, sid: str) -> str:
+    return os.path.join(campaign_dir, trace_relpath(sid))
+
+
+def save_traces(campaign_dir: str, sid: str, traces: Dict) -> str:
+    """Persist a cell's dense trace dict as a compressed sidecar.
+
+    Returns the path *relative to the campaign dir* (what the JSONL
+    record stores).  Written atomically (tmp + rename) so a killed run
+    never leaves a torn archive for resume to trip on."""
+    path = trace_path(campaign_dir, sid)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    arrays = {k: np.asarray(v) for k, v in traces.items()}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez_compressed(f, **arrays)
+    os.replace(tmp, path)
+    return trace_relpath(sid)
+
+
+def load_trace_file(path: str) -> Dict[str, np.ndarray]:
+    """Load a sidecar back into a plain dict of numpy arrays."""
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def load_cell_traces(campaign_dir: str, record: Dict
+                     ) -> Optional[Dict[str, np.ndarray]]:
+    """Resolve a JSONL record's traces: sidecar if it names one, else the
+    legacy inlined dict, else None.
+
+    Legacy inlined traces were jsonified (nested lists), so they come
+    back as float64/int64 arrays — exact for the f32 values that were
+    widened on write, but dtype-widened; sidecars preserve dtype."""
+    result = record.get("result", {})
+    rel = result.get("trace_file")
+    if rel:
+        path = os.path.join(campaign_dir, rel)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"record {record.get('id')!r} names trace sidecar {rel!r} "
+                f"but {path} does not exist (moved campaign dir without "
+                "its traces/ subdirectory?)")
+        return load_trace_file(path)
+    inline = result.get("traces")
+    if inline is not None:
+        return {k: np.asarray(v) for k, v in inline.items()}
+    return None

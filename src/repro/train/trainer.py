@@ -40,6 +40,7 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregators as agg_lib
 from repro.core import attacks as atk_lib
@@ -47,6 +48,7 @@ from repro.core import defenses as dfn_lib
 from repro.core import safeguard as sg
 from repro.core import tree_utils as tu
 from repro.data import hetero as het_lib
+from repro.obs import schema as obs_schema
 from repro.optim import OptimizerBundle
 
 f32 = jnp.float32
@@ -213,6 +215,11 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
                                         rho=zeno_rho)
         agg, defense_state, info = defense.aggregate(state.defense_state,
                                                      grads, ctx)
+        # flight-recorder schema check (DESIGN.md §15): tracer shapes and
+        # dtypes are static, so this runs once per program trace and is
+        # free per step — a defense renaming a key or changing a shape
+        # class fails loudly here instead of corrupting campaign traces
+        obs_schema.validate_info(info, m, where=f"defense:{defense.name}")
         # dissimilarity-aware trace layer (DESIGN.md §13): the measured
         # zeta^2 heterogeneity of the reported gradients — over the
         # simulation's ground-truth honest set and over the defense's
@@ -226,14 +233,25 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
             metrics["n_good"] = info["n_good"]
             metrics["caught_byz"] = (byz_mask & ~info["good"]).sum()
             metrics["evicted_honest"] = (~byz_mask & ~info["good"]).sum()
+            metrics["good"] = info["good"]
             if "restored" in info:
                 metrics["restored"] = info["restored"].sum()
-        # per-worker detection statistics, traced when the defense
-        # publishes them (Fig-2a reads these from the engine's traces
-        # instead of re-implementing the training loop)
-        for k in ("dist_to_med_B", "dist_to_med_A"):
+        # per-worker detection statistics + live thresholds, traced when
+        # the defense publishes them — the obs event layer reconstructs
+        # evictions/threshold-crossings from exactly these surfaces
+        # (Fig-2a reads them from the engine's traces instead of
+        # re-implementing the training loop)
+        for k in ("dist_to_med_B", "dist_to_med_A",
+                  "threshold_B", "threshold_A"):
             if k in info:
                 metrics[k] = jnp.asarray(info[k], jnp.float32)
+        # adaptive-attack controller level consumed by this step's act()
+        # (observe has not folded this step's feedback yet) — its
+        # reversals are the attack's phase boundaries
+        if attack.observe is not None:
+            lvl = atk_lib.controller_level(state.attack_state)
+            if lvl is not None:
+                metrics["attack_level"] = lvl
         # second-order trace lane (DESIGN.md §14): analytic saddle
         # diagnostics of the current iterate, traced like zeta_sq
         if so_probe is not None:
@@ -266,6 +284,8 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
         params, opt_state = opt.update(agg, state.opt_state, state.params,
                                        state.step)
         metrics["grad_norm"] = jnp.sqrt(tu.tree_sq_norm(agg))
+        obs_schema.validate_metrics(metrics, m,
+                                    where=f"train_step:{defense.name}")
         new_state = TrainState(params=params, opt_state=opt_state,
                                defense_state=defense_state,
                                attack_state=attack_state,
@@ -291,7 +311,10 @@ def scan_trial(step_fn, state: TrainState, *, batch_fn, steps: int,
     ``repro.data`` are; see ``teacher_batches``'s fold_in scheme).
 
     ``trace_fields``: optional subset of metric names to stack over the
-    step axis (default: all metrics the step emits).
+    step axis (default: all metrics the step emits).  ``()`` traces
+    nothing (the scan carries no ys, so trace memory is zero); a name the
+    step does not emit raises :class:`ValueError` at trace time, naming
+    both the offender and the available fields.
 
     Returns ``(final_state, traces)`` with each trace leaf shaped
     ``(steps, ...)``.
@@ -303,6 +326,11 @@ def scan_trial(step_fn, state: TrainState, *, batch_fn, steps: int,
         else:
             st, metrics = step_fn(st, batch)
         if trace_fields is not None:
+            unknown = [k for k in trace_fields if k not in metrics]
+            if unknown:
+                raise ValueError(
+                    f"scan_trial: unknown trace field(s) {unknown}; this "
+                    f"step emits {sorted(metrics)}")
             metrics = {k: metrics[k] for k in trace_fields}
         return st, metrics
 
@@ -323,6 +351,18 @@ class Trainer:
         self.log_every = log_every
         self.name = name
         self.history: list = []
+        # non-scalar metrics are trace material, not history lines: they
+        # accumulate here every step (as device arrays — no host sync)
+        # and trace_arrays() stacks them, matching scan_trial's layout
+        self.traces: Dict[str, list] = {}
+        self._routed_keys: set = set()
+
+    def trace_arrays(self) -> Dict[str, "np.ndarray"]:
+        """Stack the accumulated per-step vector metrics into
+        ``(steps, ...)`` numpy arrays — the same dense-trace layout
+        ``scan_trial`` returns, consumable by ``repro.obs.events``."""
+        return {k: np.stack([np.asarray(v) for v in vs])
+                for k, vs in self.traces.items()}
 
     def run(self, steps: int, verbose: bool = True):
         t0 = time.time()
@@ -333,9 +373,20 @@ class Trainer:
                 self.state, metrics = self.step_fn(self.state, batch, held)
             else:
                 self.state, metrics = self.step_fn(self.state, batch)
+            # route non-scalar metrics to the trace path (history holds
+            # scalars only); surface what was routed once per run so the
+            # keys are not silently invisible
+            vec = {k: v for k, v in metrics.items()
+                   if getattr(v, "ndim", 0) != 0}
+            for k, v in vec.items():
+                self.traces.setdefault(k, []).append(v)
+            new_keys = set(vec) - self._routed_keys
+            if new_keys:
+                self._routed_keys |= new_keys
+                if verbose:
+                    print(f"[{self.name}] non-scalar metrics routed to "
+                          f".traces (not history): {sorted(new_keys)}")
             if (i + 1) % self.log_every == 0 or i == steps - 1:
-                # scalars only: vector metrics (per-worker detection
-                # statistics) are trace material, not log lines
                 rec = {k: float(v) for k, v in metrics.items()
                        if getattr(v, "ndim", 0) == 0}
                 rec["step"] = int(self.state.step)

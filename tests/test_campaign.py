@@ -4,6 +4,7 @@ attacks under vmap, knob-axis batching, and the resumable store."""
 
 import dataclasses
 import json
+import os
 
 import numpy as np
 import pytest
@@ -456,11 +457,33 @@ def test_store_tolerates_torn_line(tmp_path):
 def test_store_traces_opt_in(tmp_path):
     store = CampaignStore("t2", root=str(tmp_path))
     s = Scenario(attack="none", defense="mean")
-    store.append(s, {"acc": 0.5, "traces": {"loss": np.ones(2)}},
+    store.append(s, {"acc": 0.5,
+                     "traces": {"loss": np.ones(2, np.float32)}},
                  store_traces=True)
     rec = store.load()[scenario_id(s)]
-    assert rec["result"]["traces"]["loss"] == [1.0, 1.0]
+    # traces go to an .npz sidecar, not the JSONL: the record carries
+    # only the pointer + field list (DESIGN.md §15)
+    assert "traces" not in rec["result"]
+    assert rec["result"]["trace_fields"] == ["loss"]
+    sidecar = os.path.join(store.dir, rec["result"]["trace_file"])
+    assert os.path.exists(sidecar)
+    loaded = store.load_traces(scenario_id(s))
+    assert loaded["loss"].dtype == np.float32         # dtype preserved
+    np.testing.assert_array_equal(loaded["loss"], np.ones(2, np.float32))
     json.dumps(rec)                                   # fully serializable
+
+
+def test_store_traces_legacy_inline_reads(tmp_path):
+    """Pre-obs campaigns inlined traces into the JSONL; load_traces
+    still reads them."""
+    store = CampaignStore("t3", root=str(tmp_path))
+    s = Scenario(attack="none", defense="mean")
+    rec = {"id": scenario_id(s), "scenario": s.asdict(),
+           "result": {"acc": 0.5, "traces": {"loss": [1.0, 2.0]}}}
+    with open(store.path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    loaded = store.load_traces(scenario_id(s))
+    np.testing.assert_array_equal(loaded["loss"], [1.0, 2.0])
 
 
 # ------------------------------------------------------- table1 stats
