@@ -30,10 +30,11 @@ def _time(fn, *args, iters=5):
 
 def run(out_dir: str = "experiments/bench"):
     key = jax.random.PRNGKey(0)
+    key_sf, key_med, key = jax.random.split(key, 3)
     rows = []
 
     m, d = 16, 65536
-    a = jax.random.normal(key, (m, d), jnp.bfloat16)
+    a = jax.random.normal(key_sf, (m, d), jnp.bfloat16)
     us_k = _time(lambda x: pairwise_sqdist(x), a)
     us_r = _time(jax.jit(sf_ref.pairwise_sqdist), a)
     flops = 2 * m * m * d
@@ -42,7 +43,7 @@ def run(out_dir: str = "experiments/bench"):
     print(f"bench_kernels,safeguard_filter,{us_k:.0f}us(interp),"
           f"{us_r:.0f}us(ref),{flops:.2e}flops")
 
-    g = jax.random.normal(key, (10, 65536))
+    g = jax.random.normal(key_med, (10, 65536))
     us_k = _time(lambda x: coord_median(x), g)
     us_r = _time(jax.jit(ra_ref.coord_median), g)
     rows.append({"kernel": "robust_agg_median", "interp_us": us_k,

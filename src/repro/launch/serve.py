@@ -32,20 +32,22 @@ def main():
     args = ap.parse_args()
 
     cfg = C.get(args.arch) if args.full else C.get_smoke(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = T.init_params(cfg, key)
+    key_params, key_prompt, key_gen = jax.random.split(
+        jax.random.PRNGKey(args.seed), 3)
+    params = T.init_params(cfg, key_params)
     if cfg.embed_stub:
         prompt = 0.1 * jax.random.normal(
-            key, (args.batch, args.prompt_len, cfg.d_model), cfg.dtype)
+            key_prompt, (args.batch, args.prompt_len, cfg.d_model),
+            cfg.dtype)
     else:
         prompt = jax.random.randint(
-            key, (args.batch, args.prompt_len), 0, cfg.vocab_size,
+            key_prompt, (args.batch, args.prompt_len), 0, cfg.vocab_size,
             dtype=jnp.int32)
 
     max_seq = args.prompt_len + args.gen
     t0 = time.time()
     toks = generate(params, cfg, prompt, n_tokens=args.gen, max_seq=max_seq,
-                    rng=key, temperature=args.temperature)
+                    rng=key_gen, temperature=args.temperature)
     toks.block_until_ready()
     dt = time.time() - t0
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "

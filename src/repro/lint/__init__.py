@@ -1,0 +1,9 @@
+"""repro.lint — JAX-aware static analysis for the repo's trace-time
+contracts (DESIGN.md §16).
+
+Tier 1: AST passes (traced-branch, host-cast, np-in-trace, key-reuse,
+knob-literal, obs-key, scenario-hash).  Tier 2: jaxpr-level passes over
+the campaign programs (knob-structure invariance, jaxpr/rng baselines,
+f64 + unclamped-sqrt walks).  Run as ``python -m repro.lint``."""
+
+from repro.lint.report import Violation, render  # noqa: F401

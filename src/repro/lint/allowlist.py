@@ -1,0 +1,97 @@
+"""Allowlist for intentional lint exceptions.
+
+Two mechanisms, both explicit and reviewable:
+
+* the committed file ``lint-allowlist.txt`` at the repo root — one
+  entry per line::
+
+      <rule-id>  <path-suffix>  [message substring]
+
+  An entry suppresses a violation when the rule id matches, the
+  violation path ends with the path suffix, and (if given) the message
+  contains the substring.  Blank lines and ``#`` comments are ignored.
+
+* an inline ``# lint: allow(<rule-id>)`` trailer on the flagged source
+  line, for cases local enough that the file entry would just restate
+  the line number.
+
+Unused file entries are themselves reported (``stale-allow``) so the
+allowlist can only shrink back to reality, never accrete."""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.lint.report import Violation
+
+DEFAULT_NAME = "lint-allowlist.txt"
+
+_INLINE = re.compile(r"#\s*lint:\s*allow\(([a-z0-9-]+(?:\s*,\s*[a-z0-9-]+)*)\)")
+
+
+@dataclasses.dataclass
+class AllowEntry:
+    rule: str
+    path_suffix: str
+    substring: str
+    lineno: int           # line in the allowlist file (for stale reports)
+    used: bool = False
+
+    def matches(self, v: Violation) -> bool:
+        return (v.rule == self.rule
+                and v.path.endswith(self.path_suffix)
+                and (self.substring in v.message))
+
+
+class Allowlist:
+    def __init__(self, entries: List[AllowEntry], path: str):
+        self.entries = entries
+        self.path = path
+
+    @classmethod
+    def load(cls, root: Path) -> "Allowlist":
+        path = root / DEFAULT_NAME
+        entries: List[AllowEntry] = []
+        if path.exists():
+            for i, raw in enumerate(path.read_text().splitlines(), 1):
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                parts = line.split(None, 2)
+                if len(parts) < 2:
+                    continue
+                rule, suffix = parts[0], parts[1]
+                sub = parts[2] if len(parts) > 2 else ""
+                entries.append(AllowEntry(rule, suffix, sub, i))
+        return cls(entries, str(path))
+
+    def filter(self, violations: List[Violation]
+               ) -> Tuple[List[Violation], List[Violation]]:
+        """Split into (kept, suppressed); mark entries used."""
+        kept, suppressed = [], []
+        for v in violations:
+            hit = next((e for e in self.entries if e.matches(v)), None)
+            if hit is not None:
+                hit.used = True
+                suppressed.append(v)
+            else:
+                kept.append(v)
+        return kept, suppressed
+
+    def stale_entries(self) -> List[Violation]:
+        return [Violation("stale-allow", self.path, e.lineno,
+                          f"allowlist entry '{e.rule} {e.path_suffix}"
+                          f"{' ' + e.substring if e.substring else ''}' "
+                          "matched nothing — remove it")
+                for e in self.entries if not e.used]
+
+
+def inline_allows(source_line: str) -> List[str]:
+    """Rule ids allowed by an inline ``# lint: allow(...)`` trailer."""
+    m = _INLINE.search(source_line)
+    if not m:
+        return []
+    return [r.strip() for r in m.group(1).split(",")]

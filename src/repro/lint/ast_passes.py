@@ -1,0 +1,731 @@
+"""Tier-1 AST passes: repo-specific trace-time contracts, checked
+statically (DESIGN.md §16).
+
+Rules (ids are stable; the catalog with per-rule motivation lives in
+DESIGN.md):
+
+  traced-branch   Python ``if``/``while``/ternary on a traced value
+                  inside a scan/jit body (bakes the branch at trace
+                  time — the knob-leak class behind the engine's
+                  knobs-as-lanes design).
+  host-cast       ``float()``/``int()``/``bool()``/``.item()`` on a
+                  traced value inside a trace body (host sync /
+                  ConcretizationTypeError at vmap time).
+  np-in-trace     ``np.*`` called on a traced value inside a trace body
+                  (silently materializes, breaks grad/vmap).
+  key-reuse       a ``jax.random`` key consumed more than once in a
+                  lexical scope, consumed inside a loop it was hoisted
+                  out of, or split off and never consumed (stream
+                  misalignment — the engine-vs-Trainer bit-identity
+                  contract from PR 2/5).
+  knob-literal    a knob-named parameter / dataclass field defaulted to
+                  a bare numeric literal instead of referencing
+                  ``DEFENSE_DEFAULTS``/``ADAPTIVE_DEFAULTS``.
+  obs-key         an ``info[...]``/``metrics[...]`` key written in
+                  core/defenses.py, core/safeguard.py or
+                  train/trainer.py that is not registered in
+                  ``obs/schema.py`` (would raise SchemaError at trace
+                  time — catch it before the campaign does).
+  scenario-hash   a ``Scenario`` field added/removed/re-defaulted
+                  without updating the committed hash-treatment
+                  declaration (silently re-keys or orphans stored
+                  campaign cells).
+
+Trace bodies are found statically: functions passed to jax transforms
+(``jit``/``vmap``/``lax.scan``/``lax.cond``/...) or to the repo's own
+``scan_trial``, functions with protocol names (``aggregate``, ``act``,
+``observe``, ``step_fn``, ``body``, ``batch_fn``, ``held_fn``,
+``trial``) nested inside a factory, and everything lexically nested
+inside any of those."""
+
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.lint.allowlist import inline_allows
+from repro.lint.report import Violation
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+JAX_TRANSFORMS = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+    "scan", "cond", "while_loop", "fori_loop", "switch",
+    "make_jaxpr", "scan_trial",
+}
+
+# host-side jax namespaces whose higher-order functions are NOT traces
+# (jax.tree.map's callable runs eagerly)
+_HOST_QUALIFIERS = {"tree", "tree_util", "np", "numpy"}
+
+
+def _is_transform_call(chain: Tuple[str, ...]) -> bool:
+    if not chain or chain[-1] not in JAX_TRANSFORMS and chain[-1] != "map":
+        return False
+    if len(chain) >= 2 and chain[-2] in _HOST_QUALIFIERS:
+        return False
+    if chain[-1] == "map":          # only lax.map traces its callable
+        return len(chain) >= 2 and chain[-2] == "lax"
+    return True
+
+# nested functions with these names implement traced protocols even when
+# the jax transform call sits in another module (Defense.aggregate is
+# called from the jitted train step; Attack.act/observe likewise)
+PROTOCOL_NAMES = {"aggregate", "act", "observe", "step_fn", "body",
+                  "batch_fn", "held_fn", "trial", "power_step"}
+
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+RNG_SAMPLERS = {
+    "bits", "normal", "uniform", "gumbel", "exponential", "laplace",
+    "logistic", "cauchy", "beta", "gamma", "loggamma", "dirichlet",
+    "poisson", "bernoulli", "categorical", "choice", "permutation",
+    "randint", "truncated_normal", "rademacher", "ball", "maxwell",
+    "multivariate_normal", "orthogonal", "t", "triangular", "weibull_min",
+}
+RNG_DERIVERS = {"split", "fold_in", "clone"}
+RNG_CONSUMERS = RNG_SAMPLERS | RNG_DERIVERS
+
+
+def _dotted(node: ast.AST) -> Tuple[str, ...]:
+    """('jax','lax','scan') for jax.lax.scan; () when not a name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    a = fn.args
+    names = [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+class _Module:
+    """Parsed module plus the derived maps every pass shares."""
+
+    def __init__(self, path: Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.syntax_error: Optional[Violation] = None
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        try:
+            self.tree = ast.parse(self.source, filename=rel)
+        except SyntaxError as e:           # repro.lint replaces the old
+            self.tree = ast.Module(body=[], type_ignores=[])
+            self.syntax_error = Violation(   # compileall syntax gate
+                "syntax-error", rel, e.lineno or 1, e.msg or "syntax error",
+                col=(e.offset or 0))
+            return
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+
+    def allowed(self, lineno: int, rule: str) -> bool:
+        if 1 <= lineno <= len(self.lines):
+            return rule in inline_allows(self.lines[lineno - 1])
+        return False
+
+    def violation(self, rule: str, node: ast.AST, msg: str
+                  ) -> Optional[Violation]:
+        if self.allowed(node.lineno, rule):
+            return None
+        return Violation(rule, self.rel, node.lineno, msg,
+                         col=node.col_offset + 1)
+
+
+def load_modules(root: Path, paths: Iterable[Path]) -> List[_Module]:
+    mods = []
+    for p in sorted(paths):
+        rel = str(p.relative_to(root)) if p.is_absolute() else str(p)
+        mods.append(_Module(p if p.is_absolute() else root / p, rel))
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# trace-body discovery
+# ---------------------------------------------------------------------------
+
+def _function_defs(tree: ast.AST) -> Dict[str, List[ast.AST]]:
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+    return defs
+
+
+def trace_bodies(mod: _Module) -> List[ast.AST]:
+    """All function/lambda nodes whose bodies execute under a trace."""
+    defs = _function_defs(mod.tree)
+    roots: Set[ast.AST] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            if not _is_transform_call(_dotted(node.func)):
+                continue
+            for arg in node.args:
+                if isinstance(arg, ast.Lambda):
+                    roots.add(arg)
+                elif isinstance(arg, ast.Name):
+                    for fn in defs.get(arg.id, ()):
+                        roots.add(fn)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name in PROTOCOL_NAMES and isinstance(
+                    mod.parents.get(node),
+                    (ast.FunctionDef, ast.AsyncFunctionDef)):
+                roots.add(node)
+    # everything lexically nested inside a root is also a trace body
+    bodies: Set[ast.AST] = set()
+    for fn in roots:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                bodies.add(node)
+    return sorted(bodies, key=lambda n: n.lineno)
+
+
+# ---------------------------------------------------------------------------
+# traced-value heuristics
+# ---------------------------------------------------------------------------
+
+def _expr_is_traced(node: ast.AST, taint: Set[str]) -> bool:
+    """Direct use of a trace-body parameter (incl. attr/subscript chains
+    rooted at one), minus static-structure attributes."""
+    if isinstance(node, ast.Name):
+        return node.id in taint
+    if isinstance(node, ast.Attribute):
+        if node.attr in STATIC_ATTRS:
+            return False
+        return _expr_is_traced(node.value, taint)
+    if isinstance(node, ast.Subscript):
+        return _expr_is_traced(node.value, taint)
+    if isinstance(node, ast.BinOp):
+        return (_expr_is_traced(node.left, taint)
+                or _expr_is_traced(node.right, taint))
+    if isinstance(node, ast.UnaryOp):
+        return _expr_is_traced(node.operand, taint)
+    return False
+
+
+def _deep_traced(node: ast.AST, taint: Set[str]) -> bool:
+    """Any tainted name anywhere in the subtree, skipping
+    static-structure attribute accesses and len() calls."""
+    if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Call):
+        chain = _dotted(node.func)
+        if chain and chain[-1] in {"len", "isinstance", "hasattr",
+                                   "getattr", "callable"}:
+            return False
+    if isinstance(node, ast.Name):
+        return node.id in taint
+    return any(_deep_traced(c, taint) for c in ast.iter_child_nodes(node))
+
+
+def _test_is_traced(test: ast.AST, taint: Set[str]) -> bool:
+    if isinstance(test, ast.BoolOp):
+        return any(_test_is_traced(v, taint) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _test_is_traced(test.operand, taint)
+    if isinstance(test, ast.Compare):
+        # identity / membership tests are static at trace time (is None
+        # sentinels, dict-key membership)
+        if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+               for op in test.ops):
+            return False
+        return any(_expr_is_traced(o, taint)
+                   for o in (test.left, *test.comparators))
+    if isinstance(test, ast.Call):
+        chain = _dotted(test.func)
+        if chain and chain[-1] in {"isinstance", "hasattr", "len",
+                                   "callable", "getattr"}:
+            return False
+        return any(_expr_is_traced(a, taint) for a in test.args)
+    return _expr_is_traced(test, taint)
+
+
+# ---------------------------------------------------------------------------
+# pass: traced-branch / host-cast / np-in-trace
+# ---------------------------------------------------------------------------
+
+def check_trace_bodies(mod: _Module) -> List[Violation]:
+    out: List[Violation] = []
+    for fn in trace_bodies(mod):
+        taint = _param_names(fn)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for node in [n for stmt in body for n in ast.walk(stmt)]:
+            # don't double-report nested defs: they are their own bodies
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not fn:
+                continue
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                if _test_is_traced(node.test, taint):
+                    kind = ("while" if isinstance(node, ast.While) else
+                            "ternary" if isinstance(node, ast.IfExp)
+                            else "if")
+                    v = mod.violation(
+                        "traced-branch", node,
+                        f"Python `{kind}` on a traced value inside a "
+                        "trace body — the branch is baked in at trace "
+                        "time; use jnp.where / lax.cond, or mark the "
+                        "test `# lint: allow(traced-branch)` if it is "
+                        "genuinely static")
+                    if v:
+                        out.append(v)
+            elif isinstance(node, ast.Call):
+                chain = _dotted(node.func)
+                if (chain in (("float",), ("int",), ("bool",))
+                        and node.args
+                        and _deep_traced(node.args[0], taint)):
+                    v = mod.violation(
+                        "host-cast", node,
+                        f"`{chain[0]}()` on a traced value inside a "
+                        "trace body — concretizes the tracer; use "
+                        "jnp.asarray / .astype")
+                    if v:
+                        out.append(v)
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in {"item", "tolist"}
+                      and not node.args):
+                    v = mod.violation(
+                        "host-cast", node,
+                        f"`.{node.func.attr}()` inside a trace body — "
+                        "forces a host sync / fails under jit")
+                    if v:
+                        out.append(v)
+                elif (chain[:1] in (("np",), ("numpy",)) and len(chain) > 1
+                      and any(_deep_traced(a, taint) for a in node.args)):
+                    v = mod.violation(
+                        "np-in-trace", node,
+                        f"`{'.'.join(chain)}` called on a traced value "
+                        "inside a trace body — numpy materializes the "
+                        "tracer; use the jnp equivalent")
+                    if v:
+                        out.append(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass: debugger (parity with the grep this analyzer replaced)
+# ---------------------------------------------------------------------------
+
+def check_debugger(mod: _Module) -> List[Violation]:
+    out = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            chain = _dotted(node.func)
+            if chain in (("breakpoint",), ("pdb", "set_trace")):
+                v = mod.violation(
+                    "debugger", node,
+                    f"`{'.'.join(chain)}()` left in the tree")
+                if v:
+                    out.append(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass: key-reuse
+# ---------------------------------------------------------------------------
+
+def _is_rng_call(node: ast.AST, names: Iterable[str]) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = _dotted(node.func)
+    return (len(chain) >= 2 and chain[-2] == "random"
+            and chain[-1] in names)
+
+
+def _rng_key_params(fn: ast.AST) -> Set[str]:
+    return {p for p in _param_names(fn)
+            if p in {"key", "rng", "keys"} or p.endswith(("_key", "_rng"))}
+
+
+def check_key_reuse(mod: _Module) -> List[Violation]:
+    out: List[Violation] = []
+    for fn in ast.walk(mod.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # generation-aware tracking: a reassignment starts a new key
+        # generation (`key = fold_in(key, t)` chains are one use each)
+        gen: Dict[str, int] = {}
+        assign_at: Dict[Tuple[str, int], Tuple[ast.AST, Set[ast.AST]]] = {}
+        consumed: Dict[Tuple[str, int], List[ast.AST]] = {}
+
+        def loops_of(node: ast.AST) -> Set[ast.AST]:
+            anc, cur = set(), node
+            while cur is not fn and cur in mod.parents:
+                cur = mod.parents[cur]
+                if isinstance(cur, (ast.For, ast.While)):
+                    anc.add(cur)
+            return anc
+
+        def branch_path(node: ast.AST) -> Dict[int, int]:
+            """{id(if-node): arm} for every enclosing If — two uses in
+            different arms of one If are mutually exclusive."""
+            path, cur = {}, node
+            while cur is not fn and cur in mod.parents:
+                parent = mod.parents[cur]
+                if isinstance(parent, ast.If):
+                    # cur is a *direct* child: the test, or a statement
+                    # of one arm
+                    if any(cur is s for s in parent.body):
+                        path[id(parent)] = 0
+                    elif any(cur is s for s in parent.orelse):
+                        path[id(parent)] = 1
+                cur = parent
+            return path
+
+        def may_coexecute(a: ast.AST, b: ast.AST) -> bool:
+            pa, pb = branch_path(a), branch_path(b)
+            return all(pa[k] == pb[k] for k in pa.keys() & pb.keys())
+
+        for p in _rng_key_params(fn):
+            gen[p] = 0
+            assign_at[(p, 0)] = (fn, set())
+
+        # nested defs get their own scope; exclude their bodies
+        nested = [n for n in ast.walk(fn)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                  and n is not fn]
+        skip = {id(x) for sub in nested for x in ast.walk(sub)
+                if x is not sub}
+        own = sorted(
+            (n for n in ast.walk(fn) if id(n) not in skip
+             and hasattr(n, "lineno")),
+            key=lambda n: (n.lineno, n.col_offset))
+
+        def consume(node: ast.Call) -> None:
+            arg0 = node.args[0]
+            if isinstance(arg0, ast.Name) and arg0.id in gen:
+                consumed.setdefault((arg0.id, gen[arg0.id]), []).append(node)
+
+        handled: Set[int] = set()
+        for node in own:
+            if isinstance(node, ast.Assign):
+                is_rng_rhs = _is_rng_call(
+                    node.value, {"split", "fold_in", "PRNGKey", "key",
+                                 "wrap_key_data", "clone"})
+                if is_rng_rhs and node.value.args:
+                    consume(node.value)        # RHS reads the OLD gen
+                    handled.add(id(node.value))
+                for tgt in node.targets:
+                    elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+                    for e in elts:
+                        if not isinstance(e, ast.Name):
+                            continue
+                        if is_rng_rhs and not e.id.startswith("_"):
+                            gen[e.id] = gen.get(e.id, -1) + 1
+                            assign_at[(e.id, gen[e.id])] = (
+                                node, loops_of(node))
+                        elif e.id in gen:      # non-rng rebind kills it
+                            gen.pop(e.id)
+            elif isinstance(node, ast.Call) and id(node) not in handled \
+                    and _is_rng_call(node, RNG_CONSUMERS) and node.args:
+                consume(node)
+
+        for (name, g), uses in consumed.items():
+            assign, assign_loops = assign_at[(name, g)]
+            clash = next(
+                ((a, b) for i, a in enumerate(uses) for b in uses[i + 1:]
+                 if may_coexecute(a, b)), None)
+            if clash is not None:
+                v = mod.violation(
+                    "key-reuse", clash[1],
+                    f"rng key `{name}` consumed more than once in one "
+                    f"scope (first at line {clash[0].lineno}) — split "
+                    "it first; every key is consumed exactly once")
+                if v:
+                    out.append(v)
+            for use in uses:
+                if loops_of(use) - assign_loops:
+                    v = mod.violation(
+                        "key-reuse", use,
+                        f"rng key `{name}` assigned outside a loop but "
+                        "consumed inside it — every iteration reuses "
+                        "the same stream; fold the loop index in")
+                    if v:
+                        out.append(v)
+
+        # dead keys: split/fold products never read at all
+        loads = {n.id for n in ast.walk(fn)
+                 if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+        for (name, g), (assign, _) in assign_at.items():
+            if isinstance(assign, ast.Assign) and name not in loads:
+                v = mod.violation(
+                    "key-reuse", assign,
+                    f"rng key `{name}` is split off but never consumed "
+                    "— dead keys silently shift the stream layout; "
+                    "name it `_...` if the slot is intentional")
+                if v:
+                    out.append(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass: knob-literal
+# ---------------------------------------------------------------------------
+
+_KNOB_SOURCES = ("DEFENSE_DEFAULTS", "ADAPTIVE_DEFAULTS")
+
+
+def knob_names(root: Path) -> Set[str]:
+    """Keys of DEFENSE_DEFAULTS / ADAPTIVE_DEFAULTS, read from the AST
+    (self-maintaining: a new knob in either dict extends the rule)."""
+    names: Set[str] = set()
+    for rel in ("src/repro/core/defenses.py", "src/repro/core/attacks.py"):
+        tree = ast.parse((root / rel).read_text())
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id in _KNOB_SOURCES
+                    and isinstance(node.value, ast.Dict)):
+                for k in node.value.keys:
+                    if isinstance(k, ast.Constant) and isinstance(
+                            k.value, str):
+                        names.add(k.value)
+    return names
+
+
+def _mentions_knob_source(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Name) and n.id in _KNOB_SOURCES
+               for n in ast.walk(node))
+
+
+def check_knob_literals(mod: _Module, knobs: Set[str]) -> List[Violation]:
+    out: List[Violation] = []
+
+    def flag(node: ast.AST, name: str, kind: str):
+        v = mod.violation(
+            "knob-literal", node,
+            f"{kind} `{name}` defaults to a bare literal — single-source "
+            "it from DEFENSE_DEFAULTS/ADAPTIVE_DEFAULTS (duplicated "
+            "knob literals drift; PR 3/4 contract)")
+        if v:
+            out.append(v)
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            a = node.args
+            pos = [*a.posonlyargs, *a.args]
+            for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+                if (p.arg in knobs
+                        and isinstance(d, ast.Constant)
+                        and isinstance(d.value, (int, float))
+                        and not isinstance(d.value, bool)):
+                    flag(d, p.arg, "parameter")
+            for p, d in zip(a.kwonlyargs, a.kw_defaults):
+                if (d is not None and p.arg in knobs
+                        and isinstance(d, ast.Constant)
+                        and isinstance(d.value, (int, float))
+                        and not isinstance(d.value, bool)):
+                    flag(d, p.arg, "parameter")
+        elif isinstance(node, ast.ClassDef):
+            for stmt in node.body:
+                if (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)
+                        and stmt.target.id in knobs
+                        and stmt.value is not None
+                        and isinstance(stmt.value, ast.Constant)
+                        and isinstance(stmt.value.value, (int, float))
+                        and not isinstance(stmt.value.value, bool)):
+                    flag(stmt.value, stmt.target.id, "dataclass field")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass: obs-key
+# ---------------------------------------------------------------------------
+
+OBS_WRITER_FILES = ("src/repro/core/defenses.py",
+                    "src/repro/core/safeguard.py",
+                    "src/repro/train/trainer.py")
+
+
+def registered_obs_keys(root: Path) -> Dict[str, Set[str]]:
+    """{'info': {...}, 'metrics': {...}} parsed from obs/schema.py's
+    registry assignments (AST-level, no import)."""
+    tree = ast.parse((root / "src/repro/obs/schema.py").read_text())
+    tables = {"INFO": "info", "METRICS": "metrics"}
+    out: Dict[str, Set[str]] = {"info": set(), "metrics": set()}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            target, value = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name) and node.value is not None:
+            target, value = node.target, node.value
+        else:
+            continue
+        if target.id in tables:
+            surface = tables[target.id]
+            for call in ast.walk(value):
+                if (isinstance(call, ast.Call)
+                        and _dotted(call.func)[-1:] == ("MetricSpec",)
+                        and call.args
+                        and isinstance(call.args[0], ast.Constant)):
+                    out[surface].add(call.args[0].value)
+    return out
+
+
+def _loop_const_values(mod: _Module, name_node: ast.Name) -> List[str]:
+    """If ``name_node`` is the target of an enclosing ``for k in
+    ("a", "b"):`` loop, return the constant tuple elements."""
+    cur = name_node
+    while cur in mod.parents:
+        cur = mod.parents[cur]
+        if isinstance(cur, ast.For) and isinstance(cur.target, ast.Name) \
+                and cur.target.id == name_node.id \
+                and isinstance(cur.iter, (ast.Tuple, ast.List)):
+            vals = [e.value for e in cur.iter.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)]
+            if len(vals) == len(cur.iter.elts):
+                return vals
+    return []
+
+
+def written_obs_keys(mod: _Module) -> List[Tuple[str, str, ast.AST]]:
+    """(surface, key, node) for every statically-visible write into an
+    ``info``/``metrics`` dict."""
+    out: List[Tuple[str, str, ast.AST]] = []
+    surface_of = {"info": "info", "metrics": "metrics"}
+    for node in ast.walk(mod.tree):
+        # info["k"] = ... / metrics["k"] = ...
+        if isinstance(node, ast.Subscript) and isinstance(
+                node.ctx, ast.Store) and isinstance(node.value, ast.Name) \
+                and node.value.id in surface_of:
+            surface = surface_of[node.value.id]
+            sl = node.slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+                out.append((surface, sl.value, node))
+            elif isinstance(sl, ast.Name):
+                for k in _loop_const_values(mod, sl):
+                    out.append((surface, k, node))
+        # info = {...} / metrics = {...} dict literals
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id in surface_of \
+                and isinstance(node.value, ast.Dict):
+            surface = surface_of[node.targets[0].id]
+            for k in node.value.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    out.append((surface, k.value, k))
+        # return {...} from helpers named *_info
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name.endswith("_info"):
+            for ret in ast.walk(node):
+                if isinstance(ret, ast.Return) and isinstance(
+                        ret.value, ast.Dict):
+                    for k in ret.value.keys:
+                        if isinstance(k, ast.Constant) and isinstance(
+                                k.value, str):
+                            out.append(("info", k.value, k))
+        # info.update({...}) / metrics.update({...}) with a dict literal
+        elif isinstance(node, ast.Call) and isinstance(
+                node.func, ast.Attribute) and node.func.attr == "update" \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id in surface_of \
+                and node.args and isinstance(node.args[0], ast.Dict):
+            surface = surface_of[node.func.value.id]
+            for k in node.args[0].keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    out.append((surface, k.value, k))
+    return out
+
+
+def check_obs_keys(mod: _Module, registered: Dict[str, Set[str]]
+                   ) -> List[Violation]:
+    out: List[Violation] = []
+    for surface, key, node in written_obs_keys(mod):
+        if key not in registered[surface]:
+            v = mod.violation(
+                "obs-key", node,
+                f"{surface} key {key!r} is written here but not "
+                "registered in repro.obs.schema — the trace-time "
+                "validator will raise SchemaError; register a "
+                "MetricSpec first (PR 7 contract)")
+            if v:
+                out.append(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass: scenario-hash
+# ---------------------------------------------------------------------------
+
+SCENARIO_FILE = "src/repro/campaign/scenario.py"
+
+
+def scenario_fields(root: Path) -> Dict[str, Dict[str, Optional[str]]]:
+    """field -> {'default': unparsed default or None, 'id': treatment}
+    parsed from the Scenario dataclass.  Fields without a default are
+    'always' in scenario_id; defaulted fields are 'when-non-default'."""
+    tree = ast.parse((root / SCENARIO_FILE).read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "Scenario":
+            fields: Dict[str, Dict[str, Optional[str]]] = {}
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and isinstance(
+                        stmt.target, ast.Name):
+                    default = (ast.unparse(stmt.value)
+                               if stmt.value is not None else None)
+                    fields[stmt.target.id] = {
+                        "default": default,
+                        "id": ("always" if default is None
+                               else "when-non-default"),
+                    }
+            return fields
+    raise RuntimeError(f"Scenario dataclass not found in {SCENARIO_FILE}")
+
+
+def check_scenario_hash(root: Path, baseline_path: Path
+                        ) -> List[Violation]:
+    current = scenario_fields(root)
+    if not baseline_path.exists():
+        return [Violation(
+            "scenario-hash", SCENARIO_FILE, 1,
+            f"hash-treatment declaration {baseline_path.name} is "
+            "missing — run `python -m repro.lint --update-baselines`")]
+    declared = json.loads(baseline_path.read_text())["fields"]
+    out: List[Violation] = []
+    for name, spec in current.items():
+        if name not in declared:
+            out.append(Violation(
+                "scenario-hash", SCENARIO_FILE, 1,
+                f"new Scenario field `{name}` has no declared hash "
+                "treatment — a defaulted field joins scenario_id only "
+                "when non-default (stored cells keep their keys); "
+                "confirm that is what you want, then run `python -m "
+                "repro.lint --update-baselines`"))
+        elif declared[name] != spec:
+            out.append(Violation(
+                "scenario-hash", SCENARIO_FILE, 1,
+                f"Scenario field `{name}` changed its default "
+                f"({declared[name]['default']!r} -> "
+                f"{spec['default']!r}) — this re-keys every stored "
+                "cell that pinned the old default; update the "
+                "declaration with --update-baselines after migrating "
+                "the store"))
+    for name in declared:
+        if name not in current:
+            out.append(Violation(
+                "scenario-hash", SCENARIO_FILE, 1,
+                f"Scenario field `{name}` was removed but is still "
+                "declared — stored cells that set it are now "
+                "unreachable; clean up with --update-baselines"))
+    return out

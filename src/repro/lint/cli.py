@@ -1,0 +1,123 @@
+"""``python -m repro.lint`` — run the two-tier analyzer.
+
+Exit 0 when the tree is clean, 1 with one ``file:line: rule message``
+report line per finding otherwise.  ``--update-baselines`` regenerates
+the committed tier-2 baselines (jaxpr hashes, rng signatures) and the
+Scenario hash-treatment declaration — do that only after reviewing why
+they moved."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import List
+
+from repro.lint import ast_passes, jaxpr_passes
+from repro.lint.allowlist import Allowlist
+from repro.lint.report import Violation, render
+
+SCAN_DIRS = ("src", "tests", "benchmarks")
+EXCLUDE_PARTS = {"lint_fixtures", "__pycache__", ".git"}
+
+SCENARIO_BASELINE = jaxpr_passes.BASELINE_DIR / "scenario_fields.json"
+
+
+def _python_files(root: Path) -> List[Path]:
+    files: List[Path] = []
+    for d in SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if not EXCLUDE_PARTS.intersection(p.parts):
+                files.append(p)
+    return files
+
+
+def run_tier1(root: Path) -> List[Violation]:
+    mods = ast_passes.load_modules(root, _python_files(root))
+    knobs = ast_passes.knob_names(root)
+    registered = ast_passes.registered_obs_keys(root)
+    out: List[Violation] = []
+    for mod in mods:
+        if mod.syntax_error is not None:
+            out.append(mod.syntax_error)
+            continue
+        out.extend(ast_passes.check_trace_bodies(mod))
+        out.extend(ast_passes.check_debugger(mod))
+        # tests deliberately feed two implementations the same key for
+        # A/B determinism, so the stream-layout rule scopes to shipped
+        # code (DESIGN.md §16)
+        if not mod.rel.startswith("tests/"):
+            out.extend(ast_passes.check_key_reuse(mod))
+        out.extend(ast_passes.check_knob_literals(mod, knobs))
+        if mod.rel in ast_passes.OBS_WRITER_FILES:
+            out.extend(ast_passes.check_obs_keys(mod, registered))
+    out.extend(ast_passes.check_scenario_hash(root, SCENARIO_BASELINE))
+    return out
+
+
+def _update_scenario_baseline(root: Path) -> None:
+    fields = ast_passes.scenario_fields(root)
+    SCENARIO_BASELINE.parent.mkdir(parents=True, exist_ok=True)
+    SCENARIO_BASELINE.write_text(
+        json.dumps({"fields": fields}, indent=1) + "\n")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="JAX-aware static analysis for this repo's "
+                    "trace-time contracts (DESIGN.md §16)")
+    ap.add_argument("--tier", choices=["1", "2", "all"], default="all",
+                    help="1 = AST passes only (fast); 2 = jaxpr passes "
+                         "only; all = both (default)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected from this "
+                         "package's location)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="regenerate tier-2 baselines + the Scenario "
+                         "hash declaration instead of diffing them")
+    ap.add_argument("--no-invariance", action="store_true",
+                    help="skip the knob-invariance probes (the most "
+                         "expensive tier-2 check)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress progress output")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root else \
+        Path(__file__).resolve().parents[3]
+    t0 = time.time()
+
+    if args.update_baselines:
+        _update_scenario_baseline(root)
+
+    violations: List[Violation] = []
+    if args.tier in ("1", "all"):
+        violations.extend(run_tier1(root))
+    if args.tier in ("2", "all"):
+        progress = None if args.quiet else (
+            lambda lab: print(f"lint: tracing {lab}", file=sys.stderr))
+        violations.extend(jaxpr_passes.run_tier2(
+            update_baselines=args.update_baselines,
+            with_invariance=not args.no_invariance,
+            progress=progress))
+
+    allow = Allowlist.load(root)
+    kept, suppressed = allow.filter(violations)
+    kept.extend(allow.stale_entries())
+
+    wall = time.time() - t0
+    if kept:
+        print(render(kept))
+        print(f"repro.lint: {len(kept)} violation(s) "
+              f"({len(suppressed)} allowlisted) in {wall:.1f}s",
+              file=sys.stderr)
+        return 1
+    if not args.quiet:
+        print(f"repro.lint: clean ({len(suppressed)} allowlisted, "
+              f"tier={args.tier}, {wall:.1f}s)", file=sys.stderr)
+    return 0

@@ -1,0 +1,354 @@
+"""Tier-2 jaxpr-level passes: abstract-trace the campaign programs and
+check structural invariants (DESIGN.md §16).
+
+Rules:
+
+  knob-structure  a vmappable knob leaked into program structure: the
+                  jaxpr of ``make_trial_fn`` differs across scenario
+                  variants that share ``batch_key`` (the recompilation
+                  class — every such leak multiplies campaign compile
+                  count by the axis length).
+  jaxpr-drift     a program's jaxpr hash moved off the committed
+                  baseline (structure changed; regenerate with
+                  ``--update-baselines`` after review).
+  rng-drift       a program's rng-consumption signature (primitive ->
+                  count) moved off the committed baseline (stream
+                  layout changed; engine-vs-Trainer bit-identity and
+                  stored campaign cells are keyed to it).
+  f64             a float64 value appears in a traced program (x64 is
+                  off repo-wide; a promotion means a host float leaked
+                  into a trace).
+  sqrt-diff       an unclamped ``sqrt(sub(...))`` chain in a traced
+                  program — the PR-3 NaN class; decision-site sqrts
+                  must clamp (``jnp.maximum(sqdist, 0.0)``).
+
+Programs are the deduped ``batch_key`` groups of the committed
+campaigns (table1/defense/hetero/saddle/smoke) at quick depth — the
+same program set CI smokes execute, but here only *traced* (~1s per
+program, no compile, no run)."""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.lint.report import Violation
+
+QUICK_STEPS = 40
+CAMPAIGN_NAMES = ("table1", "defense", "hetero", "saddle", "smoke")
+ENGINE_FILE = "src/repro/campaign/engine.py"
+
+# knob axes probed for structure leaks: (scenario field, variant value).
+# Variants stay inside each knob's validated range and differ from every
+# campaign default so the probe is never a no-op.
+KNOB_VARIANTS: Dict[str, float] = {
+    "attack_scale": 3.5,
+    "threshold_floor": 0.7,
+    "threshold_scale": 1.9,
+    "clip_tau": 2.5,
+    "clip_beta": 0.8,
+    "adapt_init": 0.3,
+    "adapt_rate": 1.11,
+    "adapt_down": 0.6,
+    "adapt_target": 0.7,
+    "hetero_alpha": 2.0,
+    "hetero_shift": 0.9,
+    "saddle_gap": 0.8,
+    "noise_r": 0.02,
+    "escape_nu": 0.2,
+    "escape_thresh": 0.05,
+    "seed": 7,
+}
+
+RNG_PRIMITIVES = ("random_seed", "random_wrap", "random_unwrap",
+                  "random_split", "random_fold_in", "random_bits",
+                  "threefry2x32")
+
+# unary structural ops a value passes through unchanged on its way into
+# a sqrt — walked through when hunting the producing arithmetic op
+_PASS_THROUGH = {"convert_element_type", "copy", "broadcast_in_dim",
+                 "squeeze", "reshape", "slice", "stop_gradient"}
+
+
+# ---------------------------------------------------------------------------
+# program enumeration + tracing
+# ---------------------------------------------------------------------------
+
+def campaign_programs() -> List[Tuple[str, object]]:
+    """(label, representative scenario) per unique ``batch_key`` across
+    the committed campaigns, first campaign to produce a key wins."""
+    from repro.campaign import engine
+    from repro.campaign.run import CAMPAIGNS
+
+    programs: Dict[tuple, Tuple[str, object]] = {}
+    for name in CAMPAIGN_NAMES:
+        for group in engine.group_scenarios(CAMPAIGNS[name](1, QUICK_STEPS)):
+            key = engine.batch_key(group[0])
+            if key not in programs:
+                s = group[0]
+                label = (f"{name}/{s.task}/{s.attack}/{s.defense}"
+                         f"/h={s.hetero or 'iid'}/p={s.perturb or 'none'}")
+                # several groups can share the readable part (e.g. the
+                # two guard modes); disambiguate with the key hash
+                h = hashlib.sha256(repr(key).encode()).hexdigest()[:8]
+                programs[key] = (f"{label}#{h}", s)
+    return sorted(programs.values(), key=lambda kv: kv[0])
+
+
+def trace_program(scenario, make_fn: Optional[Callable] = None):
+    """ClosedJaxpr of the trial program for one scenario (lane 0 knob
+    values as the abstract inputs — values never enter the jaxpr)."""
+    import jax
+    from repro.campaign import engine
+
+    knobs = {k: v[0] for k, v in engine.stack_knobs([scenario]).items()}
+    fn = (make_fn or engine.make_trial_fn)(scenario)
+    return jax.make_jaxpr(fn)(knobs)
+
+
+def jaxpr_hash(closed) -> str:
+    return hashlib.sha256(str(closed).encode()).hexdigest()[:16]
+
+
+def _walk_jaxprs(jaxpr):
+    """Yield every (sub)jaxpr reachable through eqn params (scan bodies,
+    cond branches, pjit-lowered calls)."""
+    seen = set()
+    stack = [jaxpr]
+    while stack:
+        jx = stack.pop()
+        if id(jx) in seen:
+            continue
+        seen.add(id(jx))
+        yield jx
+        for eqn in jx.eqns:
+            for val in eqn.params.values():
+                for sub in (val if isinstance(val, (tuple, list))
+                            else (val,)):
+                    inner = getattr(sub, "jaxpr", None)
+                    if inner is not None:
+                        stack.append(inner)
+                    elif hasattr(sub, "eqns"):
+                        stack.append(sub)
+
+
+def rng_counts(closed) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for jx in _walk_jaxprs(closed.jaxpr):
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            if name in RNG_PRIMITIVES:
+                counts[name] = counts.get(name, 0) + 1
+    return dict(sorted(counts.items()))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walks: f64 + unclamped sqrt-of-difference
+# ---------------------------------------------------------------------------
+
+def find_f64(closed, label: str) -> List[Violation]:
+    # one violation per program: the first f64-producing eqn names the
+    # leak; the rest are downstream of it
+    for jx in _walk_jaxprs(closed.jaxpr):
+        for eqn in jx.eqns:
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                if aval is not None and str(getattr(aval, "dtype", ""),
+                                            ) == "float64":
+                    return [Violation(
+                        "f64", ENGINE_FILE, 1,
+                        f"program {label}: `{eqn.primitive.name}` "
+                        "produces float64 — x64 is off repo-wide, so a "
+                        "host double leaked into the trace")]
+    return []
+
+
+def find_unclamped_sqrt(closed, label: str) -> List[Violation]:
+    out = []
+    for jx in _walk_jaxprs(closed.jaxpr):
+        producer = {}
+        for eqn in jx.eqns:
+            for var in eqn.outvars:
+                producer[var] = eqn
+        for eqn in jx.eqns:
+            if eqn.primitive.name != "sqrt":
+                continue
+            def produced_by(var):
+                # Literal invars (unhashable) have no producer eqn
+                return None if hasattr(var, "val") else producer.get(var)
+
+            src = eqn.invars[0]
+            for _ in range(8):       # walk through pass-through unaries
+                p = produced_by(src)
+                if p is None or p.primitive.name not in _PASS_THROUGH:
+                    break
+                src = p.invars[0]
+            p = produced_by(src)
+            if p is not None and p.primitive.name == "sub":
+                out.append(Violation(
+                    "sqrt-diff", ENGINE_FILE, 1,
+                    f"program {label}: sqrt fed directly by a "
+                    "subtraction — rounding can drive the operand "
+                    "negative and NaN-poison the trial (PR-3 class); "
+                    "clamp with jnp.maximum(x, 0.0) first"))
+        del producer
+    return out
+
+
+# ---------------------------------------------------------------------------
+# knob-structure invariance (the recompilation detector)
+# ---------------------------------------------------------------------------
+
+def relevant_knobs(scenario) -> List[str]:
+    """Knob axes the program actually consumes — probing a knob the
+    scenario never reads cannot detect a leak, so the invariance check
+    skips it (keeps the probe budget ~5 traces per program)."""
+    knobs = ["seed", "attack_scale"]
+    if scenario.defense.startswith("safeguard"):
+        knobs += ["threshold_floor", "threshold_scale"]
+    if "clip" in scenario.defense or "bucket" in scenario.defense:
+        knobs += ["clip_tau", "clip_beta"]
+    if scenario.attack.startswith(("adaptive", "oscillating", "threshold",
+                                   "saddle")):
+        # all four controller knobs enter through one traced path;
+        # probing two keeps the budget without losing the detector
+        knobs += ["adapt_init", "adapt_rate"]
+    if scenario.hetero == "dirichlet":
+        knobs.append("hetero_alpha")
+    elif scenario.hetero == "shift":
+        knobs.append("hetero_shift")
+    if scenario.task.startswith("saddle"):
+        knobs += ["saddle_gap", "noise_r"]
+    if scenario.perturb == "sgd_escape":
+        knobs += ["escape_nu", "escape_thresh"]
+    return [k for k in knobs if k in KNOB_VARIANTS]
+
+
+def check_knob_invariance(scenario, label: str,
+                          make_fn: Optional[Callable] = None,
+                          knobs: Optional[Sequence[str]] = None,
+                          base_hash: Optional[str] = None
+                          ) -> List[Violation]:
+    """Re-trace ``scenario`` with each probed knob replaced by a variant
+    value and assert the jaxpr hash is unchanged.  Variants that change
+    ``batch_key`` (legit program-structure knobs, e.g. ``n_byz`` for a
+    static-n defense) are skipped — those are *supposed* to recompile."""
+    import dataclasses
+
+    from repro.campaign import engine
+
+    base_key = engine.batch_key(scenario)
+    if base_hash is None:
+        base_hash = jaxpr_hash(trace_program(scenario, make_fn))
+    out: List[Violation] = []
+    probe = relevant_knobs(scenario) if knobs is None else knobs
+    for field in probe:
+        variant = KNOB_VARIANTS[field]
+        if getattr(scenario, field, None) == variant:
+            continue
+        try:
+            alt = dataclasses.replace(scenario, **{field: variant})
+        except (TypeError, ValueError):
+            continue
+        if engine.batch_key(alt) != base_key:
+            continue
+        if jaxpr_hash(trace_program(alt, make_fn)) != base_hash:
+            out.append(Violation(
+                "knob-structure", ENGINE_FILE, 1,
+                f"program {label}: knob `{field}` leaked into program "
+                f"structure — the jaxpr changes when {field}="
+                f"{variant}, so every vmap lane of this axis "
+                "recompiles; thread the knob through the traced "
+                "`knobs` dict instead of baking it in"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# baseline orchestration
+# ---------------------------------------------------------------------------
+
+BASELINE_DIR = Path(__file__).parent / "baselines"
+JAXPR_BASELINE = BASELINE_DIR / "jaxpr_hashes.json"
+RNG_BASELINE = BASELINE_DIR / "rng_counts.json"
+
+# probe one representative per campaign for knob invariance (all
+# programs get hash+rng+walk checks; the invariance probe re-traces
+# once per relevant knob, so it runs on a spread instead of all 70+);
+# per campaign, pick the program consuming the most knob axes
+def _probe_labels(programs: Sequence[Tuple[str, object]]) -> List[str]:
+    best: Dict[str, Tuple[int, str]] = {}
+    for lab, s in programs:
+        campaign = lab.split("/", 1)[0]
+        score = len(relevant_knobs(s))
+        if campaign not in best or score > best[campaign][0]:
+            best[campaign] = (score, lab)
+    return [lab for _, lab in best.values()]
+
+
+def run_tier2(update_baselines: bool = False,
+              with_invariance: bool = True,
+              progress: Optional[Callable[[str], None]] = None
+              ) -> List[Violation]:
+    programs = campaign_programs()
+    probes = set(_probe_labels(programs)) if with_invariance else set()
+
+    hashes: Dict[str, str] = {}
+    rng: Dict[str, Dict[str, int]] = {}
+    out: List[Violation] = []
+    for lab, scenario in programs:
+        if progress:
+            progress(lab)
+        closed = trace_program(scenario)
+        hashes[lab] = jaxpr_hash(closed)
+        rng[lab] = rng_counts(closed)
+        out.extend(find_f64(closed, lab))
+        out.extend(find_unclamped_sqrt(closed, lab))
+        if lab in probes:
+            out.extend(check_knob_invariance(scenario, lab,
+                                             base_hash=hashes[lab]))
+
+    if update_baselines:
+        BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+        JAXPR_BASELINE.write_text(json.dumps(hashes, indent=1) + "\n")
+        RNG_BASELINE.write_text(json.dumps(rng, indent=1) + "\n")
+        return out
+
+    out.extend(_diff_baseline(
+        JAXPR_BASELINE, hashes, "jaxpr-drift",
+        "program structure changed — if intended, regenerate with "
+        "`python -m repro.lint --update-baselines` and review the "
+        "diff"))
+    out.extend(_diff_baseline(
+        RNG_BASELINE, rng, "rng-drift",
+        "rng-consumption signature changed — the stream layout is a "
+        "bit-identity contract (PR 2/5); if intended, regenerate with "
+        "--update-baselines"))
+    return out
+
+
+def _diff_baseline(path: Path, current: Dict, rule: str, hint: str
+                   ) -> List[Violation]:
+    rel = f"src/repro/lint/baselines/{path.name}"
+    if not path.exists():
+        return [Violation(rule, rel, 1,
+                          "baseline file missing — run `python -m "
+                          "repro.lint --update-baselines`")]
+    pinned = json.loads(path.read_text())
+    out = []
+    for lab, val in current.items():
+        if lab not in pinned:
+            out.append(Violation(rule, rel, 1,
+                                 f"new program {lab} has no pinned "
+                                 f"baseline — {hint}"))
+        elif pinned[lab] != val:
+            out.append(Violation(rule, rel, 1,
+                                 f"program {lab}: {pinned[lab]} -> "
+                                 f"{val}; {hint}"))
+    for lab in pinned:
+        if lab not in current:
+            out.append(Violation(rule, rel, 1,
+                                 f"pinned program {lab} no longer "
+                                 f"exists — {hint}"))
+    return out

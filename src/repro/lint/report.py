@@ -1,0 +1,43 @@
+"""Violation records and the ``file:line: RULE message`` report format.
+
+Every lint pass — AST (tier 1) and jaxpr (tier 2) — reports findings as
+:class:`Violation` records.  The formatting contract is one line per
+finding::
+
+    src/repro/core/defenses.py:142:8: knob-literal clip_tau defaults to
+        a bare literal 1.0 ...
+
+which editors and CI annotate directly.  Tier-2 findings anchor to the
+source location that *defines* the program under analysis (the campaign
+builder or the baseline file) so every report line is clickable."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One lint finding.
+
+    ``rule`` is the stable rule id (DESIGN.md §16 catalog), ``path`` is
+    repo-relative, ``line``/``col`` are 1-based (col 0 when unknown)."""
+    rule: str
+    path: str
+    line: int
+    message: str
+    col: int = 0
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}"
+        if self.col:
+            loc += f":{self.col}"
+        return f"{loc}: {self.rule} {self.message}"
+
+
+def render(violations: List[Violation]) -> str:
+    """Stable, sorted report: by path, then line, then rule."""
+    ordered = sorted(violations,
+                     key=lambda v: (v.path, v.line, v.col, v.rule))
+    return "\n".join(v.format() for v in ordered)

@@ -263,7 +263,6 @@ def validate_info(info: Dict, m: int, where: str = "defense") -> Dict:
     returns the dict unchanged (chainable)."""
     _validate(info, m, INFO, where)
     return info
-    return info
 
 
 def spec_of(name: str, surface: str = METRIC_SURFACE) -> MetricSpec:

@@ -1,0 +1,9 @@
+"""Known-bad fixture: `host-cast` — float() on a traced value inside a
+trace body concretizes the tracer."""
+
+
+def make_loss():
+    def step_fn(params, batch):
+        scale = float(params["w"])         # BAD: host cast of a tracer
+        return scale * batch
+    return step_fn

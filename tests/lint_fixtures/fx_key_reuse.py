@@ -1,0 +1,9 @@
+"""Known-bad fixture: `key-reuse` — one rng key consumed by two
+samplers in the same scope (correlated draws; stream contract)."""
+import jax
+
+
+def sample_pair(key):
+    a = jax.random.normal(key, (3,))
+    b = jax.random.normal(key, (3,))       # BAD: same key again
+    return a, b

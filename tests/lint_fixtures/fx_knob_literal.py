@@ -1,0 +1,6 @@
+"""Known-bad fixture: `knob-literal` — a knob-named parameter defaulted
+to a bare literal instead of DEFENSE_DEFAULTS/ADAPTIVE_DEFAULTS."""
+
+
+def make_clipper(m, clip_tau=1.0):         # BAD: duplicated knob literal
+    return m, clip_tau

@@ -1,0 +1,10 @@
+"""Known-bad fixture: `np-in-trace` — numpy called on a traced value
+inside a trace body materializes the tracer."""
+import numpy as np
+
+
+def make_agg():
+    def aggregate(state, grads, ctx):
+        total = np.sum(grads)              # BAD: numpy on a tracer
+        return total, state, {}
+    return aggregate

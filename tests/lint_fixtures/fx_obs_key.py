@@ -1,0 +1,10 @@
+"""Known-bad fixture: `obs-key` — an info key written but not
+registered in repro.obs.schema (SchemaError at trace time)."""
+
+
+def make_agg():
+    def aggregate(state, grads, ctx):
+        info = {"good": None,
+                "totally_novel_stat": grads}   # BAD: unregistered key
+        return grads, state, info
+    return aggregate

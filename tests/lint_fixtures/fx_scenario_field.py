@@ -1,0 +1,12 @@
+"""Known-bad fixture: `scenario-hash` — a Scenario grown by a field
+(`new_knob`) whose hash treatment is not declared in the committed
+baseline (scenario_fields_baseline.json next to this file declares only
+`attack`/`steps`)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    attack: str
+    steps: int = 100
+    new_knob: float = 0.5                  # BAD: undeclared field

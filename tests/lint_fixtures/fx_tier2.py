@@ -1,0 +1,16 @@
+"""Known-bad tier-2 fixtures, traced by tests/test_lint.py with
+jax.make_jaxpr: `sqrt-diff` (unclamped sqrt of a subtraction — the PR-3
+NaN class) and `f64` (a float64 promotion under x64)."""
+import jax.numpy as jnp
+
+
+def unclamped_dist(x, y):
+    return jnp.sqrt(x - y)                 # BAD: no maximum(..., 0.0)
+
+
+def clamped_dist(x, y):
+    return jnp.sqrt(jnp.maximum(x - y, 0.0))
+
+
+def promotes_f64(x):
+    return x.astype("float64") * 2.0       # BAD: x64 in the trace

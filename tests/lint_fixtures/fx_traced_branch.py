@@ -1,0 +1,11 @@
+"""Known-bad fixture: `traced-branch` — a Python `if` on a traced value
+inside a jit body bakes the branch at trace time."""
+import jax
+
+
+def make_step():
+    def step_fn(state, grads):
+        if grads > 0:                      # BAD: traced condition
+            state = state + grads
+        return state
+    return jax.jit(step_fn)
