@@ -16,7 +16,9 @@ Two mechanisms, both explicit and reviewable:
   the line number.
 
 Unused file entries are themselves reported (``stale-allow``) so the
-allowlist can only shrink back to reality, never accrete."""
+allowlist can only shrink back to reality, never accrete.  The CLI
+applies stale detection only on full (``--tier all``) runs: a partial
+run cannot tell an unused entry from one whose tier didn't run."""
 
 from __future__ import annotations
 

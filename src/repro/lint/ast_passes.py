@@ -263,13 +263,31 @@ def _test_is_traced(test: ast.AST, taint: Set[str]) -> bool:
 
 def check_trace_bodies(mod: _Module) -> List[Violation]:
     out: List[Violation] = []
-    for fn in trace_bodies(mod):
+    bodies = trace_bodies(mod)
+    body_ids = {id(b) for b in bodies}
+    for fn in bodies:
         taint = _param_names(fn)
+        # closure capture: an enclosing trace body's params are traced
+        # here too (the nested body is walked with its own taint, so
+        # pruning below must not lose them)
+        cur = fn
+        while cur in mod.parents:
+            cur = mod.parents[cur]
+            if id(cur) in body_ids:
+                taint |= _param_names(cur)
         body = fn.body if isinstance(fn.body, list) else [fn.body]
-        for node in [n for stmt in body for n in ast.walk(stmt)]:
-            # don't double-report nested defs: they are their own bodies
+        # nested defs are their own trace bodies: prune their subtrees
+        # so every node is visited exactly once (same technique as
+        # check_key_reuse)
+        nested = [n for stmt in body for n in ast.walk(stmt)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda))]
+        skip = {id(x) for sub in nested for x in ast.walk(sub)
+                if x is not sub}
+        for node in [n for stmt in body for n in ast.walk(stmt)
+                     if id(n) not in skip]:
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
-                                 ast.Lambda)) and node is not fn:
+                                 ast.Lambda)):
                 continue
             if isinstance(node, (ast.If, ast.While, ast.IfExp)):
                 if _test_is_traced(node.test, taint):

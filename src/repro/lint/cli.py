@@ -13,7 +13,7 @@ import json
 import sys
 import time
 from pathlib import Path
-from typing import List
+from typing import List, Tuple
 
 from repro.lint import ast_passes, jaxpr_passes
 from repro.lint.allowlist import Allowlist
@@ -58,6 +58,18 @@ def run_tier1(root: Path) -> List[Violation]:
             out.extend(ast_passes.check_obs_keys(mod, registered))
     out.extend(ast_passes.check_scenario_hash(root, SCENARIO_BASELINE))
     return out
+
+
+def apply_allowlist(violations: List[Violation], allow: Allowlist,
+                    tier: str) -> Tuple[List[Violation], List[Violation]]:
+    """(kept, suppressed) after the allowlist.  Stale detection needs
+    the full violation set: a partial run (e.g. CI-style ``--tier 2``)
+    cannot tell an unused entry from one whose tier simply didn't run,
+    so only ``--tier all`` may call entries stale."""
+    kept, suppressed = allow.filter(violations)
+    if tier == "all":
+        kept.extend(allow.stale_entries())
+    return kept, suppressed
 
 
 def _update_scenario_baseline(root: Path) -> None:
@@ -106,9 +118,8 @@ def main(argv=None) -> int:
             with_invariance=not args.no_invariance,
             progress=progress))
 
-    allow = Allowlist.load(root)
-    kept, suppressed = allow.filter(violations)
-    kept.extend(allow.stale_entries())
+    kept, suppressed = apply_allowlist(
+        violations, Allowlist.load(root), args.tier)
 
     wall = time.time() - t0
     if kept:

@@ -273,6 +273,11 @@ BASELINE_DIR = Path(__file__).parent / "baselines"
 JAXPR_BASELINE = BASELINE_DIR / "jaxpr_hashes.json"
 RNG_BASELINE = BASELINE_DIR / "rng_counts.json"
 
+
+def _jax_version() -> str:
+    import jax
+    return jax.__version__
+
 # probe one representative per campaign for knob invariance (all
 # programs get hash+rng+walk checks; the invariance probe re-traces
 # once per relevant knob, so it runs on a spread instead of all 70+);
@@ -311,8 +316,11 @@ def run_tier2(update_baselines: bool = False,
 
     if update_baselines:
         BASELINE_DIR.mkdir(parents=True, exist_ok=True)
-        JAXPR_BASELINE.write_text(json.dumps(hashes, indent=1) + "\n")
-        RNG_BASELINE.write_text(json.dumps(rng, indent=1) + "\n")
+        version = _jax_version()
+        JAXPR_BASELINE.write_text(json.dumps(
+            {"jax": version, "programs": hashes}, indent=1) + "\n")
+        RNG_BASELINE.write_text(json.dumps(
+            {"jax": version, "programs": rng}, indent=1) + "\n")
         return out
 
     out.extend(_diff_baseline(
@@ -335,7 +343,8 @@ def _diff_baseline(path: Path, current: Dict, rule: str, hint: str
         return [Violation(rule, rel, 1,
                           "baseline file missing — run `python -m "
                           "repro.lint --update-baselines`")]
-    pinned = json.loads(path.read_text())
+    data = json.loads(path.read_text())
+    pinned, pinned_jax = data["programs"], data["jax"]
     out = []
     for lab, val in current.items():
         if lab not in pinned:
@@ -351,4 +360,16 @@ def _diff_baseline(path: Path, current: Dict, rule: str, hint: str
             out.append(Violation(rule, rel, 1,
                                  f"pinned program {lab} no longer "
                                  f"exists — {hint}"))
+    # jaxpr pretty-printing and lowering move between jax releases, so
+    # under a different jax every hash shifts at once — that is version
+    # skew, not a repo regression; report it as one actionable line
+    # instead of a per-program avalanche
+    if out and pinned_jax != _jax_version():
+        return [Violation(
+            rule, rel, 1,
+            f"{len(out)} program(s) differ from the baseline, but the "
+            f"baseline was generated under jax {pinned_jax} and this "
+            f"run uses jax {_jax_version()} — rerun under jax "
+            f"{pinned_jax} (the version CI pins), or regenerate with "
+            "--update-baselines if the repo is moving versions")]
     return out

@@ -85,6 +85,39 @@ def test_head_is_clean_tier1():
     assert not kept, "\n" + render(kept)
 
 
+def test_nested_lambda_violation_reported_once(tmp_path):
+    """Nested bodies are pruned from the enclosing walk: a .item()
+    inside a lambda inside a jitted fn is one violation, not two."""
+    bad = tmp_path / "fx.py"
+    bad.write_text(
+        "import jax\n\n\n"
+        "def make_step():\n"
+        "    def step_fn(x):\n"
+        "        f = lambda y: y.item()\n"
+        "        return f(x)\n"
+        "    return jax.jit(step_fn)\n")
+    mod = ast_passes.load_modules(tmp_path, [bad])[0]
+    violations = ast_passes.check_trace_bodies(mod)
+    assert [v.rule for v in violations] == ["host-cast"]
+
+
+def test_closure_taint_reaches_nested_lambda(tmp_path):
+    """An enclosing trace body's param stays tainted inside a nested
+    lambda (pruning must not lose closure-captured tracers)."""
+    bad = tmp_path / "fx.py"
+    bad.write_text(
+        "import jax\n\n\n"
+        "def make_step():\n"
+        "    def step_fn(x):\n"
+        "        f = lambda y: float(x) + y\n"
+        "        return f(0.0)\n"
+        "    return jax.jit(step_fn)\n")
+    mod = ast_passes.load_modules(tmp_path, [bad])[0]
+    violations = ast_passes.check_trace_bodies(mod)
+    assert [v.rule for v in violations] == ["host-cast"]
+    assert "float" in violations[0].message
+
+
 def test_inline_allow_suppresses(tmp_path):
     bad = tmp_path / "fx.py"
     bad.write_text(
@@ -107,6 +140,20 @@ def test_allowlist_stale_entry_reported(tmp_path):
     stale = allow.stale_entries()
     assert kept == [] and len(stale) == 1
     assert stale[0].rule == "stale-allow"
+
+
+def test_stale_detection_only_on_full_runs(tmp_path):
+    """A partial run (CI-style `--tier 2`) must not call a tier-1
+    allowlist entry stale — only `--tier all` sees every violation."""
+    (tmp_path / "lint-allowlist.txt").write_text(
+        "knob-literal  src/repro/core/safeguard.py  threshold_scale\n")
+    for tier, expect_stale in (("1", 0), ("2", 0), ("all", 1)):
+        allow = Allowlist.load(tmp_path)
+        kept, suppressed = cli.apply_allowlist([], allow, tier)
+        assert suppressed == []
+        assert len(kept) == expect_stale, tier
+        if kept:
+            assert kept[0].rule == "stale-allow"
 
 
 # ---------------------------------------------------------------------------
@@ -196,14 +243,43 @@ def test_clean_trial_is_knob_invariant():
 
 def test_baselines_pinned_for_committed_programs():
     """The committed baseline files cover every current campaign
-    program label (regenerating is explicit: --update-baselines)."""
-    hashes = json.loads(jaxpr_passes.JAXPR_BASELINE.read_text())
-    rng = json.loads(jaxpr_passes.RNG_BASELINE.read_text())
+    program label (regenerating is explicit: --update-baselines) and
+    record the jax version they were generated under."""
+    hashes_doc = json.loads(jaxpr_passes.JAXPR_BASELINE.read_text())
+    rng_doc = json.loads(jaxpr_passes.RNG_BASELINE.read_text())
+    assert hashes_doc["jax"] == rng_doc["jax"]
+    hashes, rng = hashes_doc["programs"], rng_doc["programs"]
     assert set(hashes) == set(rng)
     assert len(hashes) > 50
     for campaign in jaxpr_passes.CAMPAIGN_NAMES[:4]:
         assert any(lab.startswith(campaign + "/") for lab in hashes), \
             campaign
+
+
+def test_baseline_version_skew_collapses_to_one_report(tmp_path):
+    """Hash diffs under a different jax version are version skew, not a
+    repo regression: they collapse to a single 'rerun under jax X'
+    violation instead of a per-program avalanche."""
+    path = tmp_path / "jaxpr_hashes.json"
+    pinned = {"p1": "aaaa", "p2": "bbbb", "p3": "cccc"}
+    current = {"p1": "aaaa", "p2": "beef", "p3": "feed"}
+
+    path.write_text(json.dumps({"jax": "0.0.1", "programs": pinned}))
+    skewed = jaxpr_passes._diff_baseline(path, current, "jaxpr-drift", "h")
+    assert len(skewed) == 1
+    assert "jax 0.0.1" in skewed[0].message
+
+    # same diffs under the SAME version: real drift, reported per program
+    path.write_text(json.dumps(
+        {"jax": jaxpr_passes._jax_version(), "programs": pinned}))
+    real = jaxpr_passes._diff_baseline(path, current, "jaxpr-drift", "h")
+    assert len(real) == 2
+    assert all(v.rule == "jaxpr-drift" for v in real)
+
+    # version skew with NO diffs stays silent (pretty-printing stable)
+    path.write_text(json.dumps({"jax": "0.0.1", "programs": current}))
+    assert jaxpr_passes._diff_baseline(path, current, "jaxpr-drift", "h") \
+        == []
 
 
 def test_violation_format():
