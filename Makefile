@@ -1,9 +1,10 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench-quick bench-overhead campaign-smoke \
-	adaptive-smoke defense-smoke hetero-smoke saddle-smoke lint \
-	lint-fast lint-baselines dryrun-smoke obs-smoke
+.PHONY: test test-fast bench-quick bench-overhead bench-regress \
+	campaign-smoke adaptive-smoke defense-smoke hetero-smoke \
+	saddle-smoke lint lint-fast lint-baselines dryrun-smoke obs-smoke \
+	live-smoke
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -19,6 +20,12 @@ bench-quick:
 # regenerate the committed BENCH_safeguard_overhead.json baseline
 bench-overhead:
 	$(PY) -m benchmarks.run --quick --only overhead
+
+# benchmark regression gate (DESIGN.md §17): re-measure the
+# machine-independent metrics of every committed BENCH_*.json baseline
+# and fail on tolerance breaks
+bench-regress:
+	$(PY) -m benchmarks.regress --check
 
 # the CI campaign step: run the quick Table-1 grid, assert the store resumes
 campaign-smoke:
@@ -67,6 +74,30 @@ obs-smoke:
 	$(PY) -m repro.campaign.run --campaign smoke --quick --seeds 1 \
 	    --root /tmp/obs-smoke --store-traces | grep -q "new_cells=0"
 	md5sum -c --quiet /tmp/obs-smoke/traces.md5
+
+# the CI live-telemetry step (DESIGN.md §17): tapped smoke campaign ->
+# per-cell heartbeat JSONL under <store>/live/; assert (1) heartbeats
+# exist and render, (2) the clean lane raises zero alerts while the
+# variance-attack lane raises an eviction storm, (3) a resume run
+# leaves the heartbeat files byte-identical, (4) the benchmark
+# regression gate holds on the live-overhead baseline
+live-smoke:
+	rm -rf /tmp/live-smoke && mkdir -p /tmp/live-smoke
+	$(PY) -m repro.campaign.run --campaign live --quick --seeds 1 \
+	    --tap-every 10 --root /tmp/live-smoke
+	test -n "$$(ls /tmp/live-smoke/live/live/*.jsonl)"
+	$(PY) -m repro.obs.live tail --root /tmp/live-smoke \
+	    --campaign live --once
+	$(PY) -m repro.obs.live alerts --root /tmp/live-smoke \
+	    --campaign live \
+	    --expect-clean none- --expect-clean variance-mean \
+	    --expect eviction_storm:variance-safeguard_double
+	md5sum /tmp/live-smoke/live/live/*.jsonl > /tmp/live-smoke/beats.md5
+	$(PY) -m repro.campaign.run --campaign live --quick --seeds 1 \
+	    --tap-every 10 --root /tmp/live-smoke \
+	    | grep "new_cells=0" >/dev/null
+	md5sum -c --quiet /tmp/live-smoke/beats.md5
+	$(PY) -m benchmarks.regress --check --only live
 
 # static analysis (DESIGN.md §16): ruff (style subset, pyproject.toml)
 # when available + the repo's JAX-aware analyzer (tier 1 AST passes,

@@ -1,0 +1,149 @@
+"""Live-telemetry overhead: does ``tap_every=50`` cost <2% step time?
+
+The flight recorder's layer-4 promise (DESIGN.md §17) is that streaming
+one bounded heartbeat per K-step window out of a running scan — the
+``scan_trial(tap_every=K)`` path, ``jax.experimental.io_callback`` into
+``repro.obs.live.LiveCollector`` — is cheap enough to leave on for every
+campaign.  Three scan-rolled variants, all with full trace capture (the
+realistic flight-recorder-on configuration):
+
+  * **untapped**   ``tap_every=0`` — the flat single scan; baseline;
+  * **tapped_50**  one heartbeat per 50 steps — the <2% claim;
+  * **tapped_10**  one heartbeat per 10 steps — 5x denser, reported for
+                   context (how the cost scales with tap rate).
+
+The tap target is a minimal host counter (not a full
+``LiveCollector``) so the measured cost is the device<->host round trip
+plus the nested-scan restructuring, not json/file I/O — the collector's
+own host work happens off the measured path in real runs too (callbacks
+are async-dispatched; ``block_until_ready`` on the result does not wait
+on the host side's json writes).
+
+All variants are AOT-compiled (``obs.profile.profile_compiled``) so the
+nested scan's extra compile time is visible separately from execute
+time.  The model is the benchmark protocol's teacher-student MLP at
+d_hidden=256, matching ``benchmarks/trace_overhead.py``.
+
+Writes ``BENCH_live_overhead.json`` (committed at the repo root).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import attacks as atk_lib
+from repro.data import tasks
+from repro.obs import profile as prof
+from repro.optim import make_optimizer
+from repro.train import init_train_state, make_train_step, scan_trial
+from benchmarks import common
+
+
+class _CountingTap:
+    """Minimal callback target: counts beats, keeps the last payload."""
+
+    def __init__(self):
+        self.count = 0
+        self.last = None
+
+    def __call__(self, payload):
+        self.count += 1
+        self.last = payload
+
+
+def _trial_fn(task, *, steps: int, tap_every: int, tap=None,
+              lr: float = 0.05, batch: int = 100, seed: int = 0):
+    """A self-contained scan-rolled trial closure (same program family
+    as ``trace_overhead._trial_fn``: variance attack, safeguard_double,
+    full capture)."""
+    attack = atk_lib.make_registry(steps=steps)["variance"]
+    defense = common.make_defense("safeguard_double")
+    opt = make_optimizer(TrainConfig(lr=lr))
+
+    def trial():
+        params = tasks.student_init(task, seed=seed + 1)
+        state = init_train_state(params, opt, defense=defense,
+                                 attack=attack, seed=seed)
+        step = make_train_step(tasks.mlp_loss, opt, byz_mask=common.BYZ,
+                               defense=defense, attack=attack, jit=False)
+
+        def batch_fn(t):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), t)
+            x = jax.random.normal(
+                key, (common.M, batch // common.M, task.d_in),
+                jnp.float32)
+            y = jnp.argmax(tasks.mlp_apply(task.teacher, x), axis=-1)
+            return {"x": x, "y": y}
+
+        final, traces = scan_trial(step, state, batch_fn=batch_fn,
+                                   steps=steps, tap_every=tap_every,
+                                   tap=tap)
+        return final.params["w1"].sum(), traces
+
+    return trial
+
+
+def run(steps: int = 150, repeats: int = 5,
+        out_path: str = "BENCH_live_overhead.json") -> Dict:
+    task = tasks.make_teacher_task(d_in=64, d_hidden=256, n_classes=10)
+
+    taps = {"tapped_50": _CountingTap(), "tapped_10": _CountingTap()}
+    variants = {
+        "untapped": _trial_fn(task, steps=steps, tap_every=0),
+        "tapped_50": _trial_fn(task, steps=steps, tap_every=50,
+                               tap=taps["tapped_50"]),
+        "tapped_10": _trial_fn(task, steps=steps, tap_every=10,
+                               tap=taps["tapped_10"]),
+    }
+    rows = {}
+    for name, fn in variants.items():
+        rec = prof.profile_compiled(fn, repeats=repeats)
+        rec.pop("_out")
+        jax.effects_barrier()           # drain async callback dispatches
+        row = {**rec, "us_per_step": round(1e6 * rec["execute_s"] / steps,
+                                           3)}
+        if name in taps:
+            row["taps_fired"] = taps[name].count
+        rows[name] = row
+        print(f"live_overhead,{name},execute_s,{rec['execute_s']:.4f},"
+              f"compile_s,{rec['compile_s']:.2f},"
+              f"taps,{row.get('taps_fired', 0)}")
+
+    base = rows["untapped"]["execute_s"]
+    frac_50 = (rows["tapped_50"]["execute_s"] - base) / base
+    frac_10 = (rows["tapped_10"]["execute_s"] - base) / base
+    # every timed execution of a tapped program must have fired its
+    # heartbeats, else the "overhead" measured nothing
+    fired_ok = (rows["tapped_50"]["taps_fired"]
+                >= (steps // 50) * rows["tapped_50"]["repeats"]
+                and rows["tapped_10"]["taps_fired"]
+                >= (steps // 10) * rows["tapped_10"]["repeats"])
+    result = {
+        "task": {"d_in": task.d_in, "d_hidden": 256, "n_classes": 10,
+                 "m": common.M, "n_byz": common.N_BYZ, "steps": steps},
+        "repeats": repeats,
+        "variants": rows,
+        "tap50_overhead_frac": round(frac_50, 4),
+        "tap10_overhead_frac": round(frac_10, 4),
+        "taps_fired_ok": bool(fired_ok),
+        "claim": "live tapping at tap_every=50 (one io_callback "
+                 "heartbeat per window, nested-scan restructuring "
+                 "included) costs <2% of the untapped execute time",
+        "claim_holds": bool(frac_50 < 0.02 and fired_ok),
+    }
+    print(f"live_overhead,tap50_frac,{frac_50:.4f},"
+          f"tap10_frac,{frac_10:.4f},"
+          f"claim_holds,{result['claim_holds']}")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+        f.write("\n")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,247 @@
+"""Benchmark regression gate: diff fresh runs against the committed
+``BENCH_*.json`` trajectory with per-metric tolerances.
+
+The repo commits four benchmark baselines at the root —
+``BENCH_trace_overhead.json``, ``BENCH_safeguard_overhead.json``,
+``BENCH_campaign_throughput.json``, ``BENCH_live_overhead.json`` — each
+carrying a measured claim (capture <5%, flat engine beats stacked, vmap
+beats the loop with zero acc drift, tap_every=50 <2%).  Absolute
+timings are machine weather; what must NOT regress are the
+machine-independent derived metrics: overhead *fractions*, speedup
+*ratios*, ``claim_holds`` booleans, drift ceilings.  This module is the
+registry of those metrics and their tolerances, and the CI entry point
+that re-measures them:
+
+    PYTHONPATH=src python -m benchmarks.regress --check [--only live,...]
+
+``--check`` re-runs each benchmark in quick mode into a scratch
+directory (the committed baselines are never overwritten) and compares.
+``--against DIR`` skips the re-run and diffs pre-computed records from
+``DIR`` (the offline path unit tests use).  Exit code 1 on any failed
+comparison, with one ``regress,...`` CSV line per metric either way.
+
+Comparison kinds:
+
+  ``bool``     fresh value must equal the committed one
+  ``abs``      ``|fresh - base| <= tol``
+  ``ceiling``  both committed and fresh must be ``<= tol`` (re-verifies
+               an absolute claim and that the committed file still
+               honors it)
+  ``floor``    both committed and fresh must be ``>= tol``
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+KINDS = ("bool", "abs", "ceiling", "floor")
+
+
+@dataclass(frozen=True)
+class Check:
+    """One guarded metric of a baseline record.
+
+    ``extract(record) -> {label: value}`` pulls the metric(s); the
+    default reads ``record[metric]`` as a single unlabeled value.
+    Labels present on only one side (e.g. the model size the full run
+    measures but quick mode skips) are reported and skipped, not
+    failed."""
+    metric: str
+    kind: str
+    tol: float = 0.0
+    extract: Optional[Callable[[Dict], Dict[str, float]]] = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown check kind {self.kind!r}")
+
+    def values(self, record: Dict) -> Dict[str, float]:
+        if self.extract is not None:
+            return self.extract(record)
+        return {"": record[self.metric]}
+
+
+@dataclass(frozen=True)
+class Suite:
+    """One committed baseline: how to re-measure it and what to hold."""
+    baseline: str                       # file name at the repo root
+    fresh: Callable[[str], Dict]        # out_path -> fresh record
+    checks: List[Check] = field(default_factory=list)
+
+
+def _speedup_entries(record: Dict) -> Dict[str, float]:
+    return {f"d={e['d']}": e["flat_speedup_vs_stacked"]
+            for e in record.get("entries", [])
+            if "flat_speedup_vs_stacked" in e}
+
+
+def _fresh_trace(out_path: str) -> Dict:
+    from benchmarks import trace_overhead
+    return trace_overhead.run(steps=60, repeats=3, out_path=out_path)
+
+
+def _fresh_safeguard(out_path: str) -> Dict:
+    from benchmarks import overhead
+    out_dir = os.path.dirname(out_path) or "."
+    overhead.run(out_dir=out_dir, quick=True, baseline_path=out_path)
+    with open(out_path) as f:
+        return json.load(f)
+
+
+def _fresh_campaign(out_path: str) -> Dict:
+    from benchmarks import campaign_throughput
+    out_dir = os.path.dirname(out_path) or "."
+    campaign_throughput.run(out_dir=out_dir, quick=True,
+                            baseline_path=out_path)
+    with open(out_path) as f:
+        return json.load(f)
+
+
+def _fresh_live(out_path: str) -> Dict:
+    from benchmarks import live_overhead
+    # steps must tile both tap rates (50, 10); 100 = quick
+    return live_overhead.run(steps=100, repeats=3, out_path=out_path)
+
+
+SUITES: Dict[str, Suite] = {
+    "trace": Suite(
+        baseline="BENCH_trace_overhead.json",
+        fresh=_fresh_trace,
+        checks=[
+            Check("claim_holds", "bool"),
+            Check("trace_overhead_frac", "ceiling", 0.05),
+            Check("zeta_compute_frac", "abs", 0.25),
+        ]),
+    "safeguard": Suite(
+        baseline="BENCH_safeguard_overhead.json",
+        fresh=_fresh_safeguard,
+        checks=[
+            Check("flat_speedup_vs_stacked", "floor", 1.0,
+                  extract=_speedup_entries),
+        ]),
+    "campaign": Suite(
+        baseline="BENCH_campaign_throughput.json",
+        fresh=_fresh_campaign,
+        checks=[
+            Check("max_acc_drift", "ceiling", 0.0),
+            Check("vmap_speedup", "floor", 1.0),
+        ]),
+    "live": Suite(
+        baseline="BENCH_live_overhead.json",
+        fresh=_fresh_live,
+        checks=[
+            Check("claim_holds", "bool"),
+            Check("taps_fired_ok", "bool"),
+            Check("tap50_overhead_frac", "ceiling", 0.02),
+            Check("tap10_overhead_frac", "ceiling", 0.10),
+        ]),
+}
+
+
+def compare(base: Dict, fresh: Dict, checks: List[Check],
+            name: str = "") -> List[str]:
+    """Run every check of one suite; returns failure messages (empty =
+    pass) and prints one CSV verdict line per compared value."""
+    failures: List[str] = []
+    for c in checks:
+        b_vals, f_vals = c.values(base), c.values(fresh)
+        for label in sorted(set(b_vals) | set(f_vals)):
+            tag = f"{c.metric}[{label}]" if label else c.metric
+            if label not in b_vals or label not in f_vals:
+                side = "baseline" if label not in b_vals else "fresh"
+                print(f"regress,{name},{tag},skipped,missing in {side}")
+                continue
+            b, f = b_vals[label], f_vals[label]
+            if c.kind == "bool":
+                ok = bool(f) == bool(b)
+                detail = f"base,{b},fresh,{f}"
+            elif c.kind == "abs":
+                ok = abs(f - b) <= c.tol
+                detail = f"base,{b},fresh,{f},tol,{c.tol}"
+            elif c.kind == "ceiling":
+                ok = b <= c.tol and f <= c.tol
+                detail = f"base,{b},fresh,{f},ceiling,{c.tol}"
+            else:                                           # floor
+                ok = b >= c.tol and f >= c.tol
+                detail = f"base,{b},fresh,{f},floor,{c.tol}"
+            verdict = "ok" if ok else "FAIL"
+            print(f"regress,{name},{tag},{detail},{verdict}")
+            if not ok:
+                failures.append(f"{name}: {tag} ({detail})")
+    return failures
+
+
+def run(only: Optional[List[str]] = None, against: Optional[str] = None,
+        baseline_dir: Path = REPO_ROOT,
+        scratch: Optional[str] = None) -> List[str]:
+    """Gate the selected suites; returns the list of failures."""
+    import tempfile
+    names = only or sorted(SUITES)
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        raise SystemExit(f"regress: unknown suite(s) {unknown}; "
+                         f"have {sorted(SUITES)}")
+    failures: List[str] = []
+    with tempfile.TemporaryDirectory() as tmp:
+        out_dir = scratch or tmp
+        for n in names:
+            suite = SUITES[n]
+            base_path = Path(baseline_dir) / suite.baseline
+            if not base_path.is_file():
+                failures.append(f"{n}: missing baseline {base_path}")
+                print(f"regress,{n},baseline,missing,{base_path},FAIL")
+                continue
+            with open(base_path) as f:
+                base = json.load(f)
+            if against is not None:
+                fresh_path = Path(against) / suite.baseline
+                if not fresh_path.is_file():
+                    failures.append(f"{n}: missing fresh record "
+                                    f"{fresh_path}")
+                    print(f"regress,{n},fresh,missing,{fresh_path},FAIL")
+                    continue
+                with open(fresh_path) as f:
+                    fresh = json.load(f)
+            else:
+                fresh = suite.fresh(os.path.join(out_dir,
+                                                 suite.baseline))
+            failures.extend(compare(base, fresh, suite.checks, name=n))
+    status = "FAIL" if failures else "ok"
+    print(f"regress,suites,{len(names)},failures,{len(failures)},{status}")
+    return failures
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.regress",
+        description="diff fresh benchmark runs against the committed "
+                    "BENCH_*.json baselines")
+    ap.add_argument("--check", action="store_true",
+                    help="re-run quick benchmarks and gate (CI mode)")
+    ap.add_argument("--against", default=None, metavar="DIR",
+                    help="diff pre-computed records in DIR instead of "
+                         "re-running")
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {sorted(SUITES)}")
+    ap.add_argument("--baseline-dir", default=str(REPO_ROOT))
+    args = ap.parse_args(argv)
+    if not args.check and args.against is None:
+        ap.error("nothing to do: pass --check or --against DIR")
+    only = args.only.split(",") if args.only else None
+    failures = run(only=only, against=args.against,
+                   baseline_dir=Path(args.baseline_dir))
+    for msg in failures:
+        print(f"regress: FAIL {msg}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -14,6 +14,8 @@ measurement (``name,...``) and writes JSON artifacts under
                   the scan+vmap engine (BENCH_campaign_throughput.json)
   trace_overhead  flight-recorder cost: full-schema trace capture vs
                   trace_zeta=False (BENCH_trace_overhead.json)
+  live_overhead   live-telemetry cost: scan_trial tap_every=50/10 vs
+                  untapped (BENCH_live_overhead.json)
   kernels         Pallas kernels (interpret) vs jnp reference
   roofline        three-term roofline per (arch x shape) from the dry runs
 """
@@ -37,7 +39,7 @@ def main() -> None:
     from benchmarks import (table1_attack_grid, fig2_detection, fig2_reset,
                             convex_attack, saddle_escape, overhead,
                             campaign_throughput, bench_kernels, roofline,
-                            trace_overhead)
+                            trace_overhead, live_overhead)
     jobs = {
         "table1": lambda: table1_attack_grid.run(steps=steps),
         "fig2a": lambda: fig2_detection.run(steps=max(steps, 120)),
@@ -50,6 +52,8 @@ def main() -> None:
         "campaign": lambda: campaign_throughput.run(quick=args.quick),
         "trace_overhead": lambda: trace_overhead.run(
             steps=60 if args.quick else 150),
+        "live_overhead": lambda: live_overhead.run(
+            steps=100 if args.quick else 150),
         "kernels": bench_kernels.run,
         "roofline": roofline.run,
     }

@@ -153,7 +153,31 @@ def _build_defense(rep: Scenario, knobs) -> dfn_lib.Defense:
     return reg[rep.defense]
 
 
-def make_trial_fn(rep: Scenario):
+def fit_tap_every(steps: int, tap_every: int) -> int:
+    """Largest divisor of ``steps`` that is <= ``tap_every`` —
+    ``scan_trial`` requires windows to tile the trial exactly, and the
+    campaign CLI should not have to care that ``--quick`` shrinks
+    ``steps`` below the default tap period."""
+    if tap_every <= 0:
+        return 0
+    for k in range(min(tap_every, steps), 0, -1):
+        if steps % k == 0:
+            return k
+    return 0
+
+
+def _tap_kwargs(rep: Scenario, knobs, tap, tap_every: int) -> Dict:
+    """The ``scan_trial`` tap wiring for one trial: the window period
+    fitted to the trial length, and the vmap lane index threaded into
+    every payload (the host callback's only lane identity)."""
+    if not tap_every or tap is None:
+        return {}
+    return {"tap_every": fit_tap_every(rep.steps, tap_every), "tap": tap,
+            "tap_meta": {"lane": knobs["lane"]} if "lane" in knobs
+            else None}
+
+
+def make_trial_fn(rep: Scenario, *, tap=None, tap_every: int = 0):
     """Build ``trial(knobs) -> result`` for the family ``rep`` represents.
 
     ``knobs`` is the dict of vmappable scalars built by
@@ -161,9 +185,13 @@ def make_trial_fn(rep: Scenario):
     and saddle knobs).  Everything else about ``rep`` is baked into the
     traced program, which is why only scenarios sharing
     :func:`batch_key` may be stacked into one call.
+
+    ``tap``/``tap_every`` stream the live-telemetry heartbeat out of
+    the scan (DESIGN.md §17) — semantics-free: the tapped program's
+    step sequence is bit-identical to the untapped one.
     """
     if rep.task in sad_lib.SADDLE_TASKS:
-        return _make_saddle_trial_fn(rep)
+        return _make_saddle_trial_fn(rep, tap=tap, tap_every=tap_every)
     family, _ = attack_family(rep)
     task = tasks.make_teacher_task(rep.d_in, rep.d_hidden, rep.n_classes,
                                    seed=rep.task_seed)
@@ -224,7 +252,9 @@ def make_trial_fn(rep: Scenario):
                 return tasks.teacher_batch(task, key, 10)
 
         final, traces = scan_trial(step_fn, state, batch_fn=batch_fn,
-                                   steps=rep.steps, held_fn=held_fn)
+                                   steps=rep.steps, held_fn=held_fn,
+                                   **_tap_kwargs(rep, knobs, tap,
+                                                 tap_every))
 
         eval_b = tasks.teacher_batch(task, jax.random.PRNGKey(EVAL_KEY),
                                      EVAL_BATCH)
@@ -240,7 +270,7 @@ def make_trial_fn(rep: Scenario):
     return trial
 
 
-def _make_saddle_trial_fn(rep: Scenario):
+def _make_saddle_trial_fn(rep: Scenario, *, tap=None, tap_every: int = 0):
     """Trial builder for the planted-saddle task family (DESIGN.md §14).
 
     Program structure: the task kind, its planted directions, and the
@@ -290,7 +320,9 @@ def _make_saddle_trial_fn(rep: Scenario):
                                                  jnp.float32)}
 
         final, traces = scan_trial(step_fn, state, batch_fn=batch_fn,
-                                   steps=rep.steps, held_fn=held_fn)
+                                   steps=rep.steps, held_fn=held_fn,
+                                   **_tap_kwargs(rep, knobs, tap,
+                                                 tap_every))
 
         # "acc" for a saddle task is the escape predicate on the final
         # iterate, so every downstream table/store path works unchanged
@@ -378,6 +410,13 @@ def group_scenarios(scenarios: Sequence[Scenario]
     return list(groups.values())
 
 
+def cell_label(s: Scenario) -> str:
+    """Human-readable heartbeat cell name: attack/defense/seed plus a
+    scenario-hash prefix (keeps labels unique across knob variants and
+    joinable back to the store's full ``scenario_id``)."""
+    return f"{s.attack}-{s.defense}-seed{s.seed}-{scenario_id(s)[:8]}"
+
+
 def _lane_record(lane: Dict) -> Dict:
     """One host-side trial output pytree -> result record."""
     rec = {"acc": float(lane["acc"])}
@@ -414,16 +453,23 @@ def _split_lanes(out, n: int) -> List[Dict]:
             for i in range(n)]
 
 
-def run_group(group: Sequence[Scenario], *, batched: bool = True
-              ) -> List[Dict]:
+def run_group(group: Sequence[Scenario], *, batched: bool = True,
+              tap=None, tap_every: int = 0) -> List[Dict]:
     """Run one batch-compatible scenario group -> per-scenario results.
 
     ``batched=False`` runs the same trial function one lane at a time
     (the unbatched oracle the vmap equivalence tests compare against).
+
+    ``tap``/``tap_every`` enable the live heartbeat (DESIGN.md §17).
+    The ``lane`` knob is added to the stack only when tapping, so the
+    untapped program (and its committed tier-2 jaxpr baseline) is
+    byte-for-byte unchanged.
     """
     rep = group[0]
-    trial = make_trial_fn(rep)
+    trial = make_trial_fn(rep, tap=tap, tap_every=tap_every)
     knobs = stack_knobs(group)
+    if tap is not None and tap_every:
+        knobs["lane"] = jnp.arange(len(group), dtype=jnp.int32)
     if batched:
         out = jax.jit(jax.vmap(trial))(knobs)
         jax.block_until_ready(out)
@@ -438,18 +484,29 @@ def run_group(group: Sequence[Scenario], *, batched: bool = True
 
 
 def run_scenarios(scenarios: Sequence[Scenario], *, batched: bool = True,
-                  verbose: bool = False) -> Dict[str, Dict]:
+                  verbose: bool = False, collector=None,
+                  tap_every: int = 0) -> Dict[str, Dict]:
     """Run a scenario list -> ``{scenario_id: result}``.
 
     Results carry ``acc`` (final eval accuracy), the safeguard diagnostics
     (``caught_byz`` / ``evicted_honest`` / ``final_good``) when the
     defense is stateful, ``traces`` (per-step metric stacks), and
     ``wall_s`` for the group the scenario ran in.
+
+    ``collector`` (a ``repro.obs.live.LiveCollector``) with
+    ``tap_every > 0`` streams per-window heartbeats from every running
+    group; lane ids are rebound to the group's scenario ids before each
+    launch (groups run sequentially, so the binding is race-free).
     """
     results: Dict[str, Dict] = {}
+    tap = None
     for group in group_scenarios(scenarios):
+        if collector is not None and tap_every:
+            collector.set_lanes([cell_label(s) for s in group])
+            tap = collector.tap
         t0 = time.time()
-        lanes = run_group(group, batched=batched)
+        lanes = run_group(group, batched=batched, tap=tap,
+                          tap_every=tap_every)
         wall = time.time() - t0
         if verbose:
             fam, _ = attack_family(group[0])

@@ -29,16 +29,29 @@ knob axes into vmap lanes, see ``engine.batch_key``):
                    undefended mean under saddle_push provably stalls
                    (use --steps 400 for the separation; the
                    saddle_gap / noise_r / vr_period knobs are vmap lanes)
+  live             live-monitoring demo grid (DESIGN.md §17): one clean
+                   lane that must stay alert-free, the variance attack
+                   vs the safeguard (eviction storm fires as the
+                   colluders are caught) and vs the undefended mean
+                   (no evictions — only the loss stream tells the story)
   smoke            2x2 mini-grid for CI / tests
 
 A second invocation with the same arguments runs 0 new cells (the store
 is keyed by scenario content hash); extending ``--seeds`` or a campaign's
 axis lists only runs the delta.
+
+``--tap-every K`` streams a typed heartbeat (``repro.obs.schema.TAP``)
+every K steps from each running lane into ``<store>/live/<cell>.jsonl``
+(``repro.obs.live``); ``--watch`` echoes each beat as a progress line as
+it arrives.  Tail a running campaign from another terminal with
+
+    PYTHONPATH=src python -m repro.obs.live tail --campaign live
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -150,6 +163,22 @@ def _saddle(seeds: int, steps: int) -> List[Scenario]:
     return with_seeds(grid, seeds)
 
 
+def _live(seeds: int, steps: int) -> List[Scenario]:
+    """Live-monitoring demo grid (DESIGN.md §17).  Three lanes: a clean
+    safeguard run (the alert catalog must stay silent on it — the
+    ``live-smoke`` CI gate asserts exactly that), the variance attack
+    against the safeguard (the eviction-storm rule fires as the
+    colluders are caught), and the same attack against the undefended
+    mean (nothing is ever evicted; only the loss stream shows the
+    damage)."""
+    grid = expand_grid(attack=["none"], defense=["safeguard_double"],
+                       steps=[steps])
+    grid += expand_grid(attack=["variance"],
+                        defense=["safeguard_double", "mean"],
+                        steps=[steps])
+    return with_seeds(grid, seeds)
+
+
 def _smoke(seeds: int, steps: int) -> List[Scenario]:
     grid = expand_grid(attack=["sign_flip", "variance"],
                        defense=["safeguard_double", "coord_median"],
@@ -166,6 +195,7 @@ CAMPAIGNS: Dict[str, Callable[[int, int], List[Scenario]]] = {
     "defense": _defense,
     "hetero": _hetero,
     "saddle": _saddle,
+    "live": _live,
     "smoke": _smoke,
 }
 
@@ -187,6 +217,12 @@ def main(argv=None) -> Dict:
                          "(repro.obs.trace; event logs are always stored)")
     ap.add_argument("--loop", action="store_true",
                     help="run lanes unbatched (debugging / A-B timing)")
+    ap.add_argument("--tap-every", type=int, default=0, metavar="K",
+                    help="stream a live heartbeat every K steps per lane "
+                         "into <store>/live/ (repro.obs.live; 0 = off)")
+    ap.add_argument("--watch", action="store_true",
+                    help="echo each heartbeat as a per-cell progress "
+                         "line (implies --tap-every 50 if unset)")
     args = ap.parse_args(argv)
 
     steps = args.steps if args.steps is not None else (40 if args.quick
@@ -198,12 +234,26 @@ def main(argv=None) -> Dict:
     print(f"campaign,{args.campaign},cells={len(scenarios)},done={done},"
           f"new_cells={len(pending)}")
 
+    tap_every = args.tap_every or (50 if args.watch else 0)
+    collector = None
+    if tap_every:
+        from repro.obs import live as live_lib
+
+        # lazy file creation inside the collector keeps a resume run
+        # (0 pending cells -> 0 heartbeats) byte-identical on disk
+        collector = live_lib.LiveCollector(
+            name=args.campaign,
+            heartbeat_dir=os.path.join(store.dir, live_lib.LIVE_DIR),
+            echo=((lambda line: print(f"live,{line}", flush=True))
+                  if args.watch else None))
+
     t0 = time.time()
     if pending:
         n_groups = len(engine.group_scenarios(pending))
         print(f"campaign,{args.campaign},groups={n_groups}")
         results = engine.run_scenarios(pending, batched=not args.loop,
-                                       verbose=True)
+                                       verbose=True, collector=collector,
+                                       tap_every=tap_every)
         for s in pending:
             rec = results[scenario_id(s)]
             store.append(s, rec, store_traces=args.store_traces)
@@ -216,6 +266,10 @@ def main(argv=None) -> Dict:
                   f"seed={s.seed},acc={rec['acc']:.4f},caught={caught}"
                   f"{zeta}{esc}")
     wall = time.time() - t0
+    if collector is not None:
+        collector.close()
+        print(f"campaign,{args.campaign},heartbeats={len(collector.ring)},"
+              f"dropped={collector.dropped}")
     store.write_meta({"campaign": args.campaign, "seeds": args.seeds,
                       "steps": steps, "cells": len(scenarios),
                       "last_new_cells": len(pending),

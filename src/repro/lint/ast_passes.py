@@ -21,11 +21,17 @@ DESIGN.md):
   knob-literal    a knob-named parameter / dataclass field defaulted to
                   a bare numeric literal instead of referencing
                   ``DEFENSE_DEFAULTS``/``ADAPTIVE_DEFAULTS``.
-  obs-key         an ``info[...]``/``metrics[...]`` key written in
-                  core/defenses.py, core/safeguard.py or
-                  train/trainer.py that is not registered in
+  obs-key         an ``info[...]``/``metrics[...]``/``payload[...]``
+                  key written in core/defenses.py, core/safeguard.py
+                  or train/trainer.py that is not registered in
                   ``obs/schema.py`` (would raise SchemaError at trace
                   time — catch it before the campaign does).
+
+Host-callback exemption: a function handed to ``jax.experimental.
+io_callback`` / ``jax.pure_callback`` / ``jax.debug.callback`` executes
+on the host even when defined inside a trace body, so the trace-body
+rules do not apply within it (the enclosing body stays enforced; see
+``tests/lint_fixtures/fx_host_callback_good.py``).
   scenario-hash   a ``Scenario`` field added/removed/re-defaulted
                   without updating the committed hash-treatment
                   declaration (silently re-keys or orphans stored
@@ -77,6 +83,22 @@ def _is_transform_call(chain: Tuple[str, ...]) -> bool:
 # called from the jitted train step; Attack.act/observe likewise)
 PROTOCOL_NAMES = {"aggregate", "act", "observe", "step_fn", "body",
                   "batch_fn", "held_fn", "trial", "power_step"}
+
+# host-callback entry points: the callable handed as their first
+# argument executes on the HOST (numpy, float(), file I/O are all legal
+# there) even when it is defined inside a trace body — the live
+# telemetry tap (DESIGN.md §17) is exactly this shape
+HOST_CALLBACK_NAMES = {"io_callback", "pure_callback"}
+
+
+def _is_host_callback_call(chain: Tuple[str, ...]) -> bool:
+    if not chain:
+        return False
+    if chain[-1] in HOST_CALLBACK_NAMES:
+        return True
+    # jax.debug.callback / debug.callback (but not a bare `callback`)
+    return chain[-1] == "callback" and len(chain) >= 2 \
+        and chain[-2] == "debug"
 
 STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
 
@@ -187,12 +209,32 @@ def trace_bodies(mod: _Module) -> List[ast.AST]:
                     mod.parents.get(node),
                     (ast.FunctionDef, ast.AsyncFunctionDef)):
                 roots.add(node)
+    # functions handed to host callbacks escape the trace: their bodies
+    # (and anything nested in them) run host-side, so they are exempt —
+    # the surrounding trace body stays enforced
+    host: Set[ast.AST] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) \
+                and _is_host_callback_call(_dotted(node.func)) \
+                and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Lambda):
+                host.add(target)
+            elif isinstance(target, ast.Name):
+                for fn in defs.get(target.id, ()):
+                    host.add(fn)
+    host_all: Set[ast.AST] = set()
+    for fn in host:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                host_all.add(node)
     # everything lexically nested inside a root is also a trace body
     bodies: Set[ast.AST] = set()
     for fn in roots:
         for node in ast.walk(fn):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
-                                 ast.Lambda)):
+                                 ast.Lambda)) and node not in host_all:
                 bodies.add(node)
     return sorted(bodies, key=lambda n: n.lineno)
 
@@ -578,8 +620,9 @@ def registered_obs_keys(root: Path) -> Dict[str, Set[str]]:
     """{'info': {...}, 'metrics': {...}} parsed from obs/schema.py's
     registry assignments (AST-level, no import)."""
     tree = ast.parse((root / "src/repro/obs/schema.py").read_text())
-    tables = {"INFO": "info", "METRICS": "metrics"}
-    out: Dict[str, Set[str]] = {"info": set(), "metrics": set()}
+    tables = {"INFO": "info", "METRICS": "metrics", "TAP": "tap"}
+    out: Dict[str, Set[str]] = {"info": set(), "metrics": set(),
+                                "tap": set()}
     for node in ast.walk(tree):
         if isinstance(node, ast.Assign) and len(node.targets) == 1 \
                 and isinstance(node.targets[0], ast.Name):
@@ -621,7 +664,10 @@ def written_obs_keys(mod: _Module) -> List[Tuple[str, str, ast.AST]]:
     """(surface, key, node) for every statically-visible write into an
     ``info``/``metrics`` dict."""
     out: List[Tuple[str, str, ast.AST]] = []
-    surface_of = {"info": "info", "metrics": "metrics"}
+    # `payload` is the tap surface's conventional dict name
+    # (train.trainer.tap_payload builds it; keys must be TAP-registered)
+    surface_of = {"info": "info", "metrics": "metrics",
+                  "payload": "tap"}
     for node in ast.walk(mod.tree):
         # info["k"] = ... / metrics["k"] = ...
         if isinstance(node, ast.Subscript) and isinstance(
@@ -634,12 +680,19 @@ def written_obs_keys(mod: _Module) -> List[Tuple[str, str, ast.AST]]:
             elif isinstance(sl, ast.Name):
                 for k in _loop_const_values(mod, sl):
                     out.append((surface, k, node))
-        # info = {...} / metrics = {...} dict literals
-        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
-                and isinstance(node.targets[0], ast.Name) \
-                and node.targets[0].id in surface_of \
-                and isinstance(node.value, ast.Dict):
-            surface = surface_of[node.targets[0].id]
+        # info = {...} / metrics = {...} dict literals (plain or
+        # annotated assignment — `payload: Dict[...] = {...}`)
+        elif (isinstance(node, ast.Assign) and len(node.targets) == 1
+              and isinstance(node.targets[0], ast.Name)
+              and node.targets[0].id in surface_of
+              and isinstance(node.value, ast.Dict)) \
+                or (isinstance(node, ast.AnnAssign)
+                    and isinstance(node.target, ast.Name)
+                    and node.target.id in surface_of
+                    and isinstance(node.value, ast.Dict)):
+            name = (node.targets[0].id if isinstance(node, ast.Assign)
+                    else node.target.id)
+            surface = surface_of[name]
             for k in node.value.keys:
                 if isinstance(k, ast.Constant) and isinstance(k.value, str):
                     out.append((surface, k.value, k))

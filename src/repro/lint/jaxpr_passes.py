@@ -37,7 +37,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from repro.lint.report import Violation
 
 QUICK_STEPS = 40
-CAMPAIGN_NAMES = ("table1", "defense", "hetero", "saddle", "smoke")
+CAMPAIGN_NAMES = ("table1", "defense", "hetero", "saddle", "smoke",
+                  "live")
 ENGINE_FILE = "src/repro/campaign/engine.py"
 
 # knob axes probed for structure leaks: (scenario field, variant value).

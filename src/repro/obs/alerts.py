@@ -1,0 +1,249 @@
+"""Health-rule engine over live heartbeat streams (DESIGN.md §17).
+
+Each rule is a pure function of one cell's ordered heartbeat stream
+(the JSONL lines ``repro.obs.live`` persists) returning zero or more
+:class:`Alert` records.  Rules only ever *read* the typed tap surface
+(``repro.obs.schema.TAP``); a key a program does not emit simply
+disarms the rules that need it, so the same catalog runs over every
+lane (saddle lanes arm ``stalled_escape``, mean-defense lanes never arm
+``eviction_storm``).
+
+The catalog (tunable per :class:`AlertConfig`):
+
+  ``nan_guard``           critical — a non-finite value crossed the tap
+                          surface (loss, thresholds, grad/eig proxies):
+                          the aggregate is poisoned, nothing downstream
+                          of this step is trustworthy.
+  ``eviction_storm``      the live good set shrank by ``storm_k`` or
+                          more workers below its running max — either
+                          the defense is catching a coordinated attack
+                          or it is mass-evicting honest workers; both
+                          deserve eyes.  Re-arms after a periodic-reset
+                          restore.
+  ``threshold_runaway``   a live guard threshold exceeded
+                          ``runaway_factor`` x its early-stream median —
+                          the signature of a threshold-tracking
+                          adversary ratcheting the guard open.
+  ``stalled_escape``      the saddle-escape perturbation has been
+                          continuously active for ``stall_beats``
+                          heartbeats while the min-eigenvalue proxy
+                          stays negative: noise is being injected but
+                          the iterate is not leaving the saddle.
+  ``step_rate_collapse``  host-measured steps/s fell below
+                          ``collapse_frac`` x the cell's median rate —
+                          the run is still alive but something
+                          (swapping, contention, a straggler host) ate
+                          its throughput.
+
+``extract_alerts`` runs the whole catalog; ``repro.obs.live alerts``
+(the CLI) and ``repro.obs.report`` (the forensics report) both feed
+from it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+CRITICAL = "critical"
+WARNING = "warning"
+
+# float tap keys nan_guard watches (a non-finite int cannot happen)
+_FINITE_KEYS = ("loss", "honest_loss", "grad_norm", "threshold_B",
+                "threshold_A", "min_eig_proxy", "attack_level")
+
+
+@dataclasses.dataclass(frozen=True)
+class Alert:
+    """One structured health alert, anchored to a cell + step."""
+    rule: str
+    severity: str
+    cell: str
+    step: int
+    message: str
+
+    def format(self) -> str:
+        return (f"ALERT [{self.severity}] {self.rule} cell={self.cell} "
+                f"step={self.step}: {self.message}")
+
+
+@dataclasses.dataclass(frozen=True)
+class AlertConfig:
+    """Rule thresholds.  Defaults are calibrated on the smoke campaign:
+    loose enough that a clean (attack-free) safeguard lane is silent,
+    tight enough that the variance attack's eviction burst fires."""
+    storm_k: int = 2                # good-set drop that counts as a storm
+    runaway_factor: float = 50.0    # threshold blow-up vs early median
+    runaway_warmup: int = 3         # beats used for the early median
+    stall_beats: int = 3            # consecutive active-escape heartbeats
+    collapse_frac: float = 0.25     # step-rate floor vs running median
+    rate_warmup: int = 3            # beats before rate judgments
+
+
+def _finite(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x)
+
+
+# --------------------------------------------------------------------------
+# Rules — each: (beats, cell, cfg) -> [Alert]
+# --------------------------------------------------------------------------
+
+def rule_nan_guard(beats: List[Dict], cell: str, cfg: AlertConfig
+                   ) -> List[Alert]:
+    for b in beats:
+        bad = [k for k in _FINITE_KEYS
+               if k in b and not _finite(b[k])]
+        if bad:
+            return [Alert(
+                "nan_guard", CRITICAL, cell, int(b.get("step", -1)),
+                f"non-finite tap value(s) {bad} — the aggregate is "
+                "poisoned; every later step descends garbage")]
+    return []
+
+
+def _evicted_count(b: Dict, n_good_max: Optional[float]
+                   ) -> Optional[float]:
+    """Workers currently outside the good set.  Prefer the tapped
+    eviction counters (they see evictions that happened before the
+    first heartbeat); fall back to the good-set drop below its running
+    max when a program taps only ``n_good``."""
+    caught, ev = b.get("caught_byz"), b.get("evicted_honest")
+    if _finite(caught) and _finite(ev):
+        return caught + ev
+    n = b.get("n_good")
+    if _finite(n) and n_good_max is not None:
+        return max(n_good_max - n, 0.0)
+    return None
+
+
+def rule_eviction_storm(beats: List[Dict], cell: str, cfg: AlertConfig
+                        ) -> List[Alert]:
+    """Fire when the evicted-worker count rises ``storm_k`` or more
+    above its low watermark; a periodic-reset restore lowers the
+    watermark and re-arms the rule (each storm alerts once)."""
+    out: List[Alert] = []
+    low: Optional[float] = None
+    n_good_max: Optional[float] = None
+    for b in beats:
+        n = b.get("n_good")
+        if _finite(n):
+            n_good_max = n if n_good_max is None else max(n_good_max, n)
+        ev = _evicted_count(b, n_good_max)
+        if ev is None:
+            continue
+        # the watermark starts at 0, not the first beat's count: every
+        # defense starts with the full good set, so evictions that land
+        # before the first heartbeat still count toward the storm
+        low = 0.0 if low is None else min(low, ev)
+        if ev - low >= cfg.storm_k:
+            out.append(Alert(
+                "eviction_storm", WARNING, cell, int(b.get("step", -1)),
+                f"{ev - low:.0f} workers evicted since the last quiet "
+                f"point (caught_byz={b.get('caught_byz', '?')}, "
+                f"evicted_honest={b.get('evicted_honest', '?')}, "
+                f"n_good={b.get('n_good', '?')}) — mass eviction in "
+                "flight"))
+            low = ev                        # one alert per storm
+    return out
+
+
+def rule_threshold_runaway(beats: List[Dict], cell: str, cfg: AlertConfig
+                           ) -> List[Alert]:
+    out: List[Alert] = []
+    for key in ("threshold_B", "threshold_A"):
+        series = [b for b in beats if _finite(b.get(key))
+                  and b[key] > 0]
+        if len(series) <= cfg.runaway_warmup:
+            continue
+        early = sorted(b[key] for b in series[:cfg.runaway_warmup])
+        base = early[len(early) // 2]
+        if base <= 0:
+            continue
+        for b in series[cfg.runaway_warmup:]:
+            if b[key] >= cfg.runaway_factor * base:
+                out.append(Alert(
+                    "threshold_runaway", WARNING, cell,
+                    int(b.get("step", -1)),
+                    f"{key}={b[key]:.4g} is {b[key] / base:.0f}x its "
+                    f"early-stream median {base:.4g} — a threshold-"
+                    "tracking adversary may be ratcheting the guard "
+                    "open"))
+                break                        # one alert per guard
+    return out
+
+
+def rule_stalled_escape(beats: List[Dict], cell: str, cfg: AlertConfig
+                        ) -> List[Alert]:
+    streak = 0
+    for b in beats:
+        on = b.get("escape_on")
+        eig = b.get("min_eig_proxy")
+        if not (_finite(on) and _finite(eig)):
+            streak = 0
+            continue
+        if on >= 0.5 and eig < 0:
+            streak += 1
+            if streak >= cfg.stall_beats:
+                return [Alert(
+                    "stalled_escape", WARNING, cell,
+                    int(b.get("step", -1)),
+                    f"escape noise active for {streak} consecutive "
+                    f"heartbeats with min_eig_proxy={eig:.4g} still "
+                    "negative — the iterate is pinned at the saddle "
+                    "(is escape_nu large enough for this gap?)")]
+        else:
+            streak = 0
+    return []
+
+
+def rule_step_rate_collapse(beats: List[Dict], cell: str, cfg: AlertConfig
+                            ) -> List[Alert]:
+    rates: List[float] = []
+    armed = True
+    out: List[Alert] = []
+    for b in beats:
+        r = b.get("step_rate")
+        if not _finite(r) or r <= 0:
+            continue
+        if len(rates) >= cfg.rate_warmup:
+            med = sorted(rates)[len(rates) // 2]
+            if armed and r < cfg.collapse_frac * med:
+                out.append(Alert(
+                    "step_rate_collapse", WARNING, cell,
+                    int(b.get("step", -1)),
+                    f"step rate {r:.2f}/s is below "
+                    f"{cfg.collapse_frac:.0%} of the cell median "
+                    f"{med:.2f}/s — throughput collapsed"))
+                armed = False
+            elif not armed and r >= cfg.collapse_frac * med:
+                armed = True
+        rates.append(r)
+    return out
+
+
+RULES = (rule_nan_guard, rule_eviction_storm, rule_threshold_runaway,
+         rule_stalled_escape, rule_step_rate_collapse)
+
+
+def extract_alerts(beats: List[Dict], cell: str = "?",
+                   cfg: Optional[AlertConfig] = None) -> List[Alert]:
+    """Run the full rule catalog over one cell's ordered heartbeat
+    stream."""
+    cfg = cfg or AlertConfig()
+    out: List[Alert] = []
+    for rule in RULES:
+        out.extend(rule(beats, cell, cfg))
+    out.sort(key=lambda a: (a.step, a.rule))
+    return out
+
+
+def alerts_for_campaign(root, campaign: str,
+                        cfg: Optional[AlertConfig] = None
+                        ) -> Dict[str, List[Alert]]:
+    """Alerts per cell from a campaign store's heartbeat directory
+    (empty dict when the campaign was never run with tapping)."""
+    from repro.obs import live as live_lib
+    streams = live_lib.load_heartbeats(live_lib.live_dir(root, campaign))
+    return {cell: extract_alerts(beats, cell=cell, cfg=cfg)
+            for cell, beats in streams.items()}

@@ -1,0 +1,299 @@
+"""Live telemetry collector — layer 4 of the flight recorder
+(DESIGN.md §17).
+
+``scan_trial(tap_every=K)`` streams one bounded scalar payload per
+K-step window out of the running scan through
+``jax.experimental.io_callback`` (the tap surface of
+``repro.obs.schema``).  This module is the host side of that pipe:
+
+  * :class:`LiveCollector` — the callback target.  Each payload is
+    stamped with host wall-clock (``t_wall``) and the lane's measured
+    ``step_rate``, appended to a bounded in-memory ring buffer, and —
+    when a heartbeat directory is attached — persisted as one JSONL
+    line per beat under ``<store>/live/<cell>.jsonl``.  The collector
+    is thread-safe (XLA may invoke callbacks off the main thread) and
+    never raises into the device program: a failing beat is counted in
+    ``.dropped`` and the scan keeps running (telemetry must not be able
+    to kill the experiment it watches).
+  * ``load_heartbeats`` / ``latest_beats`` — read the per-cell JSONL
+    streams back.
+  * the CLI — ``python -m repro.obs.live tail`` renders a terminal
+    dashboard of the latest beat per cell (``--once`` for CI);
+    ``python -m repro.obs.live alerts`` runs the ``repro.obs.alerts``
+    rule engine over the stored streams and turns expectations
+    (``--expect-clean``, ``--expect``) into exit codes for the
+    ``live-smoke`` CI gate.
+
+Under the campaign engine's vmap the callback fires once per lane per
+window with unbatched scalars; the lane's identity rides inside the
+payload (``lane``, threaded via ``tap_meta``) and ``lane_ids`` maps it
+back to a cell name for the heartbeat file.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import sys
+import threading
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.obs import schema as obs_schema
+
+LIVE_DIR = "live"
+
+
+def _scalar(name: str, v):
+    """A json-serializable python scalar from a callback value,
+    normalized to the tap surface's canonical dtype kind (the Trainer
+    host path floats everything; device payloads arrive typed)."""
+    a = np.asarray(v)
+    spec = obs_schema.TAP.get(name)
+    if spec is not None:
+        kind = np.dtype(spec.dtype).kind
+    else:
+        kind = a.dtype.kind
+    if kind in "ui":
+        return int(a)
+    if kind == "b":
+        return bool(a)
+    return float(a)
+
+
+class LiveCollector:
+    """Host-side ring buffer + heartbeat writer for scan taps.
+
+    ``lane_ids`` maps the payload's ``lane`` index to a cell name (the
+    campaign engine passes the group's scenario ids); without it, beats
+    file under ``name`` (the interactive-``Trainer`` case, one lane).
+    ``maxlen`` bounds the in-memory ring; heartbeat files are append-
+    only and unbounded (one line per K steps — bounded by trial
+    length).  Use as a context manager to flush file handles."""
+
+    def __init__(self, *, name: str = "run",
+                 lane_ids: Optional[Sequence[str]] = None,
+                 heartbeat_dir=None, maxlen: int = 4096,
+                 echo=None, clock=time.monotonic):
+        self.name = name
+        self.lane_ids = list(lane_ids) if lane_ids is not None else None
+        self.dir = Path(heartbeat_dir) if heartbeat_dir else None
+        self.ring: "collections.deque" = collections.deque(maxlen=maxlen)
+        self.dropped = 0
+        self.echo = echo                    # callable(line) for live print
+        self._clock = clock
+        self._t0 = clock()
+        self._prev: Dict[str, tuple] = {}   # cell -> (step, t_wall)
+        self._files: Dict[str, object] = {}
+        self._lock = threading.Lock()
+        if self.dir is not None:
+            self.dir.mkdir(parents=True, exist_ok=True)
+
+    # -- the io_callback target ------------------------------------------
+    def tap(self, payload: Dict) -> None:
+        """One heartbeat.  Never raises (a telemetry bug must not kill
+        the scan it observes) — failures count in ``.dropped``."""
+        try:
+            self._tap(payload)
+        except Exception:                                # pragma: no cover
+            self.dropped += 1
+
+    def _tap(self, device_payload: Dict) -> None:
+        beat = {k: _scalar(k, v) for k, v in device_payload.items()}
+        lane = beat.get("lane")
+        with self._lock:
+            if self.lane_ids is not None and lane is not None:
+                cell = (self.lane_ids[lane]
+                        if 0 <= lane < len(self.lane_ids)
+                        else f"lane{lane}")
+            else:
+                cell = self.name
+            beat["cell"] = cell
+            t = self._clock() - self._t0
+            beat["t_wall"] = round(t, 4)
+            prev = self._prev.get(cell)
+            if prev is not None and t > prev[1]:
+                beat["step_rate"] = round(
+                    (beat.get("step", 0) - prev[0]) / (t - prev[1]), 2)
+            self._prev[cell] = (beat.get("step", 0), t)
+            self.ring.append(beat)
+            if self.dir is not None:
+                fh = self._files.get(cell)
+                if fh is None:
+                    fh = open(self.dir / f"{cell}.jsonl", "a")
+                    self._files[cell] = fh
+                fh.write(json.dumps(beat, sort_keys=True) + "\n")
+                fh.flush()
+        if self.echo is not None:
+            self.echo(format_beat(beat))
+
+    def set_lanes(self, lane_ids: Sequence[str]) -> None:
+        """Rebind the lane -> cell mapping (the campaign engine calls
+        this before launching each vmapped group; groups run
+        sequentially so there is no race with in-flight beats)."""
+        with self._lock:
+            self.lane_ids = list(lane_ids)
+            self._prev.clear()
+
+    # -- lifecycle --------------------------------------------------------
+    def close(self) -> None:
+        with self._lock:
+            for fh in self._files.values():
+                fh.close()
+            self._files.clear()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- queries ----------------------------------------------------------
+    def beats(self, cell: Optional[str] = None) -> List[Dict]:
+        with self._lock:
+            return [b for b in self.ring
+                    if cell is None or b["cell"] == cell]
+
+
+def format_beat(beat: Dict) -> str:
+    """One dashboard line for a heartbeat."""
+    parts = [f"step {beat.get('step', '?'):>6}"]
+    for key, fmt in (("loss", "{:.4g}"), ("honest_loss", "{:.4g}"),
+                     ("n_good", "{:.0f}"), ("caught_byz", "{:d}"),
+                     ("threshold_B", "{:.3g}"), ("threshold_A", "{:.3g}"),
+                     ("min_eig_proxy", "{:+.3g}"),
+                     ("attack_level", "{:.3g}"),
+                     ("step_rate", "{:.1f}/s")):
+        if key in beat:
+            parts.append(f"{key}={fmt.format(beat[key])}")
+    return f"[{beat.get('cell', '?')}] " + " ".join(parts)
+
+
+# --------------------------------------------------------------------------
+# Reading heartbeat streams back
+# --------------------------------------------------------------------------
+
+def live_dir(root, campaign: str) -> Path:
+    """Where a campaign's heartbeat files live: ``<store>/live/``."""
+    return Path(root) / campaign / LIVE_DIR
+
+
+def load_heartbeats(directory) -> Dict[str, List[Dict]]:
+    """All per-cell heartbeat streams under ``directory``, keyed by cell
+    name, each sorted by step (unordered io_callback may interleave)."""
+    out: Dict[str, List[Dict]] = {}
+    directory = Path(directory)
+    if not directory.is_dir():
+        return out
+    for path in sorted(directory.glob("*.jsonl")):
+        beats = []
+        with open(path) as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    beats.append(json.loads(line))
+        beats.sort(key=lambda b: b.get("step", 0))
+        out[path.stem] = beats
+    return out
+
+
+def latest_beats(directory) -> Dict[str, Dict]:
+    """The newest heartbeat per cell — the dashboard's data model."""
+    return {cell: beats[-1]
+            for cell, beats in load_heartbeats(directory).items() if beats}
+
+
+# --------------------------------------------------------------------------
+# CLI: tail dashboard + alert gate
+# --------------------------------------------------------------------------
+
+def _render(directory) -> str:
+    latest = latest_beats(directory)
+    if not latest:
+        return f"(no heartbeats under {directory})"
+    return "\n".join(format_beat(latest[c]) for c in sorted(latest))
+
+
+def _cmd_tail(args) -> int:
+    directory = live_dir(args.root, args.campaign)
+    if args.once:
+        print(_render(directory))
+        return 0
+    try:
+        while True:                                      # pragma: no cover
+            sys.stdout.write("\x1b[2J\x1b[H")            # clear screen
+            print(f"live: {directory}  ({time.strftime('%H:%M:%S')})  "
+                  "ctrl-c to quit")
+            print(_render(directory))
+            time.sleep(args.interval)
+    except KeyboardInterrupt:                            # pragma: no cover
+        return 0
+
+
+def _cmd_alerts(args) -> int:
+    from repro.obs import alerts as alerts_lib
+    directory = live_dir(args.root, args.campaign)
+    streams = load_heartbeats(directory)
+    if not streams:
+        print(f"alerts: no heartbeats under {directory}")
+        return 1
+    found = {cell: alerts_lib.extract_alerts(beats, cell=cell)
+             for cell, beats in streams.items()}
+    n = 0
+    for cell in sorted(found):
+        for a in found[cell]:
+            print(a.format())
+            n += 1
+    print(f"alerts: {n} alert(s) over {len(streams)} cell(s)")
+    ok = True
+    for substr in args.expect_clean or []:
+        cells = [c for c in streams if substr in c]
+        if not cells:
+            print(f"alerts: --expect-clean {substr!r} matches no cell")
+            ok = False
+        for c in cells:
+            if found[c]:
+                print(f"alerts: FAIL — expected clean cell {c} has "
+                      f"{len(found[c])} alert(s)")
+                ok = False
+    for spec in args.expect or []:
+        rule, _, substr = spec.partition(":")
+        cells = [c for c in streams if substr in c]
+        if not cells:
+            print(f"alerts: --expect {spec!r} matches no cell")
+            ok = False
+        elif not any(a.rule == rule for c in cells for a in found[c]):
+            print(f"alerts: FAIL — expected a {rule!r} alert on a cell "
+                  f"matching {substr!r}, none fired")
+            ok = False
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.live",
+        description="live heartbeat dashboard + alert gate")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    t = sub.add_parser("tail", help="terminal dashboard of latest beats")
+    t.add_argument("--root", default="experiments/campaigns")
+    t.add_argument("--campaign", default="smoke")
+    t.add_argument("--once", action="store_true",
+                   help="render once and exit (CI)")
+    t.add_argument("--interval", type=float, default=2.0)
+    a = sub.add_parser("alerts", help="run alert rules over heartbeats")
+    a.add_argument("--root", default="experiments/campaigns")
+    a.add_argument("--campaign", default="smoke")
+    a.add_argument("--expect-clean", action="append", metavar="SUBSTR",
+                   help="fail if any cell matching SUBSTR has alerts")
+    a.add_argument("--expect", action="append", metavar="RULE:SUBSTR",
+                   help="fail unless RULE fires on a cell matching SUBSTR")
+    args = p.parse_args(argv)
+    return {"tail": _cmd_tail, "alerts": _cmd_alerts}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

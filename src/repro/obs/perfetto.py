@@ -1,0 +1,239 @@
+"""Chrome-trace / Perfetto exporter for the perf side of the flight
+recorder (DESIGN.md §17).
+
+Everything the repo already measures — :class:`repro.obs.profile.
+PhaseTimer` spans, the AOT lower/compile/execute split of
+``profile_compiled``, and the loop-aware collective-bytes attribution of
+``launch.hlo_analysis`` — rendered as one Chrome trace-event JSON file
+(the format both ``chrome://tracing`` and https://ui.perfetto.dev
+open).  Event vocabulary used:
+
+  ``ph="X"``  complete span (``ts``/``dur`` in microseconds)
+  ``ph="C"``  counter sample (collective bytes per program)
+  ``ph="M"``  metadata (process/thread names — one process per campaign
+              program, threads = phases)
+
+The CLI AOT-profiles every batch-key program of a campaign (the same
+program enumeration the campaign engine executes) and writes one trace:
+
+    PYTHONPATH=src python -m repro.obs.perfetto --campaign smoke \\
+        --quick --out /tmp/smoke_trace.json
+
+``validate_chrome_trace`` is the schema gate tests (and the benchmark
+regression harness) run over any exported trace — Perfetto itself is
+not in CI, so the contract lives here.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+US = 1e6                                 # seconds -> microseconds
+
+_PHASES = ("X", "C", "M", "B", "E", "i")
+
+
+def span_event(name: str, t0_s: float, t1_s: float, *, pid: int = 0,
+               tid: int = 0, cat: str = "phase",
+               args: Optional[Dict] = None) -> Dict:
+    """One complete-span ("X") trace event from a [t0, t1] second
+    interval."""
+    ev = {"name": name, "ph": "X", "cat": cat,
+          "ts": round(t0_s * US, 3), "dur": round((t1_s - t0_s) * US, 3),
+          "pid": pid, "tid": tid}
+    if args:
+        ev["args"] = args
+    return ev
+
+
+def counter_event(name: str, t_s: float, values: Dict[str, float], *,
+                  pid: int = 0) -> Dict:
+    """One counter ("C") sample — Perfetto draws a stacked track per
+    series in ``values``."""
+    return {"name": name, "ph": "C", "ts": round(t_s * US, 3),
+            "pid": pid, "args": {k: float(v) for k, v in values.items()}}
+
+
+def meta_event(what: str, label: str, *, pid: int = 0,
+               tid: Optional[int] = None) -> Dict:
+    ev = {"name": what, "ph": "M", "ts": 0.0, "pid": pid,
+          "args": {"name": label}}
+    if tid is not None:
+        ev["tid"] = tid
+    return ev
+
+
+def timer_events(pt, *, pid: int = 0, tid: int = 0,
+                 t0: Optional[float] = None) -> List[Dict]:
+    """PhaseTimer spans -> "X" events on one thread timeline.  ``t0``
+    rebases timestamps (default: the earliest span's enter time, so the
+    trace starts at ts=0)."""
+    if not pt.spans:
+        return []
+    base = min(s[1] for s in pt.spans) if t0 is None else t0
+    return [span_event(name, enter - base, leave - base, pid=pid,
+                       tid=tid, args={"depth": depth})
+            for name, enter, leave, depth in sorted(pt.spans,
+                                                    key=lambda s: s[1])]
+
+
+def profile_events(rec: Dict, *, pid: int = 0, t0_s: float = 0.0,
+                   label: str = "program") -> List[Dict]:
+    """``profile_compiled`` record -> lower/compile/execute spans laid
+    end-to-end from ``t0_s``, plus a collective-bytes counter sample
+    when the record carries an hlo analysis.  Returns the events and
+    leaves the caller to advance its own timeline cursor (use
+    :func:`profile_span_s`)."""
+    t = t0_s
+    out: List[Dict] = []
+    for tid, key in enumerate(("lower_s", "compile_s", "execute_s")):
+        dur = float(rec.get(key, 0.0))
+        out.append(span_event(key[:-2], t, t + dur, pid=pid, tid=tid,
+                              cat="aot", args={"label": label}))
+        t += dur
+    hlo = rec.get("hlo") or {}
+    coll = {k: v for k, v in (hlo.get("collective_bytes") or {}).items()
+            if v}
+    if coll:    # single-device programs have no collectives: no track
+        out.append(counter_event("collective_bytes", t0_s, coll,
+                                 pid=pid))
+        counts = {k: v for k, v
+                  in (hlo.get("collective_counts") or {}).items() if v}
+        if counts:
+            out.append(counter_event("collective_counts", t0_s, counts,
+                                     pid=pid))
+    return out
+
+
+def profile_span_s(rec: Dict) -> float:
+    """Total seconds the :func:`profile_events` timeline occupies."""
+    return sum(float(rec.get(k, 0.0))
+               for k in ("lower_s", "compile_s", "execute_s"))
+
+
+def chrome_trace(events: List[Dict]) -> Dict:
+    """Wrap events in the Chrome trace-event container."""
+    return {"traceEvents": list(events), "displayTimeUnit": "ms"}
+
+
+def validate_chrome_trace(obj: Dict) -> List[Dict]:
+    """Assert ``obj`` is a well-formed Chrome trace-event JSON object;
+    returns the event list.  Raises :class:`ValueError` naming the
+    first offending event — this is the schema contract tests run,
+    since Perfetto itself is not importable in CI."""
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        raise ValueError("chrome trace must be an object with a "
+                         "'traceEvents' array")
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("'traceEvents' must be a list")
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            raise ValueError(f"{where}: not an object")
+        for req in ("name", "ph", "pid"):
+            if req not in ev:
+                raise ValueError(f"{where}: missing {req!r}")
+        if ev["ph"] not in _PHASES:
+            raise ValueError(f"{where}: unknown phase {ev['ph']!r}")
+        if ev["ph"] != "M" and not isinstance(ev.get("ts"), (int, float)):
+            raise ValueError(f"{where}: 'ts' must be a number")
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"{where}: X event needs dur >= 0")
+        if ev["ph"] == "C" and not isinstance(ev.get("args"), dict):
+            raise ValueError(f"{where}: C event needs an args dict")
+    return events
+
+
+# --------------------------------------------------------------------------
+# Campaign export
+# --------------------------------------------------------------------------
+
+def export_campaign(campaign: str, *, steps: int = 40, seeds: int = 1,
+                    repeats: int = 2, limit: Optional[int] = None,
+                    timer=None) -> Dict:
+    """AOT-profile every batch-key program of ``campaign`` and render
+    one Chrome trace: per program a process with lower/compile/execute
+    spans and collective counter tracks; optionally a ``timer``
+    (PhaseTimer) process for the harness's own phases."""
+    import jax
+
+    from repro.campaign import engine
+    from repro.campaign.run import CAMPAIGNS
+    from repro.obs import profile as prof
+
+    scenarios = CAMPAIGNS[campaign](seeds, steps)
+    groups = engine.group_scenarios(scenarios)
+    if limit is not None:
+        groups = groups[:limit]
+    events: List[Dict] = []
+    cursor = 0.0
+    for pid, group in enumerate(groups, start=1):
+        rep = group[0]
+        label = (f"{rep.attack}/{rep.defense}/{rep.task}"
+                 f"/lanes={len(group)}")
+        trial = engine.make_trial_fn(rep)
+        knobs = engine.stack_knobs(group)
+        rec = prof.profile_compiled(jax.vmap(trial), knobs,
+                                    repeats=repeats)
+        events.append(meta_event("process_name", label, pid=pid))
+        for tid, tname in enumerate(("lower", "compile", "execute")):
+            events.append(meta_event("thread_name", tname, pid=pid,
+                                     tid=tid))
+        events.extend(profile_events(rec, pid=pid, t0_s=cursor,
+                                     label=label))
+        cursor += profile_span_s(rec)
+    if timer is not None and timer.spans:
+        events.append(meta_event("process_name", "harness", pid=0))
+        events.extend(timer_events(timer, pid=0, t0=None))
+    return chrome_trace(events)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from repro.campaign.run import CAMPAIGNS
+    from repro.obs.profile import PhaseTimer
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.perfetto",
+        description="export campaign AOT profiles as a Chrome/Perfetto "
+                    "trace")
+    ap.add_argument("--campaign", default="smoke",
+                    choices=sorted(CAMPAIGNS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--limit", type=int, default=None,
+                    help="profile only the first N programs")
+    ap.add_argument("--out", default="/tmp/campaign_trace.json")
+    args = ap.parse_args(argv)
+
+    steps = args.steps if args.steps is not None else (40 if args.quick
+                                                       else 150)
+    pt = PhaseTimer()
+    with pt.phase("export"):
+        trace = export_campaign(args.campaign, steps=steps,
+                                seeds=args.seeds, repeats=args.repeats,
+                                limit=args.limit)
+    # the harness's own span lands after the phase exits (spans record
+    # on exit), as its own process timeline
+    trace["traceEvents"].append(meta_event("process_name", "harness",
+                                           pid=0))
+    trace["traceEvents"].extend(timer_events(pt, pid=0))
+    validate_chrome_trace(trace)
+    with open(args.out, "w") as f:
+        json.dump(trace, f)
+    n = len(trace["traceEvents"])
+    print(f"perfetto,{args.campaign},events={n},out={args.out}")
+    print("open in https://ui.perfetto.dev or chrome://tracing")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

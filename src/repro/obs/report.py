@@ -192,7 +192,36 @@ def campaign_report(store: CampaignStore, records: Dict[str, Dict]) -> str:
                 lines.append("")
                 lines.append(f"caught-fraction curve: steps to catch "
                              f"1..{n_byz} colluders = {marks}")
+    lines += _alerts_section(store)
     return "\n".join(lines) + "\n"
+
+
+def _alerts_section(store: CampaignStore) -> List[str]:
+    """Live-telemetry alerts (DESIGN.md §17), when the campaign ran
+    with ``--tap-every``/``--watch`` and left heartbeat streams under
+    ``<store>/live/``.  Absent heartbeats produce no section — stored
+    campaigns predating the live layer render unchanged."""
+    from pathlib import Path
+
+    from repro.obs import alerts as alerts_lib
+    from repro.obs import live as live_lib
+    streams = live_lib.load_heartbeats(Path(store.dir) / live_lib.LIVE_DIR)
+    if not streams:
+        return []
+    out = ["", "## live alerts", ""]
+    n = 0
+    for cell in sorted(streams):
+        for a in alerts_lib.extract_alerts(streams[cell], cell=cell):
+            out.append(f"- {a.format()}")
+            n += 1
+    if n == 0:
+        out.append(f"none — {len(streams)} heartbeat stream(s) clean")
+    else:
+        out.append("")
+        out.append(f"{n} alert(s) over {len(streams)} stream(s) — "
+                   "triage with `python -m repro.obs.live tail` and the "
+                   "per-cell forensics above")
+    return out
 
 
 # --------------------------------------------------------------------------

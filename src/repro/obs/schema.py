@@ -18,6 +18,17 @@ an older one.  The registry below gives each name a :class:`MetricSpec`
 dtypes of jax tracers are static, so validation runs once per program
 trace and costs nothing per step.
 
+PR 10 adds a third surface:
+
+  * the **tap surface** — the bounded per-window summary
+    ``scan_trial(tap_every=K)`` streams out of the running scan through
+    ``jax.experimental.io_callback`` (``repro.obs.live``); every tap key
+    is a *scalar* (the payload must stay bounded regardless of model
+    size), and its ``agg`` field records how the window of per-step
+    values is reduced to one number (``mean`` over the window or
+    ``last`` value), so a heartbeat line is interpretable without the
+    producing program.
+
 Shape classes:
 
   ``scalar``       shape ``()``
@@ -53,6 +64,10 @@ SHAPE_CLASSES = (SCALAR, PER_WORKER, PER_WINDOW, PER_BUCKET)
 # surfaces a spec may be registered on
 METRIC_SURFACE = "metrics"
 INFO_SURFACE = "info"
+TAP_SURFACE = "tap"
+
+# window-reduction modes a tap key may declare
+TAP_AGGS = ("mean", "last", "host")
 
 
 class SchemaError(ValueError):
@@ -73,11 +88,15 @@ class MetricSpec:
     source: str                     # trainer | defense | probe | attack
     description: str = ""
     window: Optional[str] = None    # "B" | "A" for guard-window stats
+    agg: Optional[str] = None       # tap surface: mean | last | host
 
     def __post_init__(self):
         if self.shape_class not in SHAPE_CLASSES:
             raise ValueError(f"unknown shape class {self.shape_class!r} "
                              f"(one of {SHAPE_CLASSES})")
+        if self.agg is not None and self.agg not in TAP_AGGS:
+            raise ValueError(f"unknown tap agg {self.agg!r} "
+                             f"(one of {TAP_AGGS})")
 
 
 def _spec_table(specs: Iterable[MetricSpec]) -> Dict[str, MetricSpec]:
@@ -176,7 +195,62 @@ METRICS: Dict[str, MetricSpec] = _spec_table([
                "analytic escape predicate of the current iterate"),
 ])
 
-_SURFACES = {METRIC_SURFACE: METRICS, INFO_SURFACE: INFO}
+# --------------------------------------------------------------------------
+# The tap surface: the bounded per-window summary scan_trial streams out
+# of a running scan (tap_every=K).  Every key is a scalar; ``agg`` says
+# how the K-step window reduces to it (``mean`` / ``last``), or ``host``
+# for keys the host-side collector stamps on (never traced).
+# --------------------------------------------------------------------------
+
+TAP: Dict[str, MetricSpec] = _spec_table([
+    MetricSpec("step", "int32", SCALAR, "trainer",
+               "global step count at the window's end", agg="last"),
+    MetricSpec("loss", "float32", SCALAR, "trainer",
+               "window-mean per-worker training loss", agg="mean"),
+    MetricSpec("honest_loss", "float32", SCALAR, "trainer",
+               "window-mean honest training loss", agg="mean"),
+    MetricSpec("grad_norm", "float32", SCALAR, "trainer",
+               "aggregated-direction norm at the window's last step",
+               agg="last"),
+    MetricSpec("n_good", "float32", SCALAR, "trainer",
+               "live good-set size (popcount) at the window's last step",
+               agg="last"),
+    MetricSpec("caught_byz", "int32", SCALAR, "trainer",
+               "Byzantine workers outside the good set, window end",
+               agg="last"),
+    MetricSpec("evicted_honest", "int32", SCALAR, "trainer",
+               "honest workers outside the good set, window end",
+               agg="last"),
+    MetricSpec("threshold_B", "float32", SCALAR, "trainer",
+               "live inner (T0) eviction threshold, window end",
+               window="B", agg="last"),
+    MetricSpec("threshold_A", "float32", SCALAR, "trainer",
+               "live outer (T1) eviction threshold, window end",
+               window="A", agg="last"),
+    MetricSpec("min_eig_proxy", "float32", SCALAR, "probe",
+               "Rayleigh min-eigenvalue proxy, window end", agg="last"),
+    MetricSpec("escape_on", "float32", SCALAR, "trainer",
+               "sgd_escape gate at the window's last step", agg="last"),
+    MetricSpec("attack_level", "float32", SCALAR, "attack",
+               "adaptive-attack controller level, window end", agg="last"),
+    MetricSpec("lane", "int32", SCALAR, "trainer",
+               "vmap lane index inside the emitting batch group (threaded "
+               "through the device payload: vmapped callbacks fire "
+               "per-lane with no other lane identity)", agg="last"),
+    MetricSpec("step_rate", "float32", SCALAR, "trainer",
+               "host-measured steps/s since the lane's previous "
+               "heartbeat", agg="host"),
+    MetricSpec("t_wall", "float32", SCALAR, "trainer",
+               "host wall-clock seconds since the collector attached",
+               agg="host"),
+])
+
+# tap keys that cross the device->host boundary (everything not host-
+# stamped), in a fixed order — the io_callback payload is this tuple
+DEVICE_TAP_KEYS = tuple(
+    n for n, s in TAP.items() if s.agg != "host")
+
+_SURFACES = {METRIC_SURFACE: METRICS, INFO_SURFACE: INFO, TAP_SURFACE: TAP}
 
 
 def register_metric(spec: MetricSpec, surface: str = METRIC_SURFACE,
@@ -241,9 +315,11 @@ def _validate(d: Dict, m: int, table: Dict[str, MetricSpec], where: str
     for name, value in d.items():
         spec = table.get(name)
         if spec is None:
+            kind = ("info" if table is INFO
+                    else "tap" if table is TAP else "metric")
             raise SchemaError(
                 f"{where}: {name!r} is not a registered "
-                f"{'info' if table is INFO else 'metric'} name — add it "
+                f"{kind} name — add it "
                 "to repro.obs.schema (register_metric) so traces stay "
                 f"comparable across campaigns; registered: "
                 f"{sorted(table)}")
@@ -263,6 +339,14 @@ def validate_info(info: Dict, m: int, where: str = "defense") -> Dict:
     returns the dict unchanged (chainable)."""
     _validate(info, m, INFO, where)
     return info
+
+
+def validate_tap(payload: Dict, where: str = "tap") -> Dict:
+    """Validate a tap payload (the per-window summary ``scan_trial``
+    streams through ``io_callback``) against the tap surface; returns
+    the dict unchanged.  Tap keys are all scalars, so ``m`` is moot."""
+    _validate(payload, 0, TAP, where)
+    return payload
 
 
 def spec_of(name: str, surface: str = METRIC_SURFACE) -> MetricSpec:

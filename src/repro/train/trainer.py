@@ -295,8 +295,42 @@ def make_train_step(loss_fn: Callable, opt: OptimizerBundle, *,
     return jax.jit(step_fn) if jit else step_fn
 
 
+def _select_traces(metrics: Dict, trace_fields) -> Dict:
+    if trace_fields is None:
+        return metrics
+    unknown = [k for k in trace_fields if k not in metrics]
+    if unknown:
+        raise ValueError(
+            f"scan_trial: unknown trace field(s) {unknown}; this "
+            f"step emits {sorted(metrics)}")
+    return {k: metrics[k] for k in trace_fields}
+
+
+def tap_payload(metrics: Dict, state: TrainState,
+                tap_meta: Optional[Dict] = None) -> Dict:
+    """Reduce a ``(K, ...)``-stacked window of step metrics to the
+    bounded scalar payload of one heartbeat (the tap surface of
+    ``repro.obs.schema``): window ``mean`` for loss-like keys, window
+    ``last`` for live state, ``tap_meta`` scalars (lane identity)
+    merged in verbatim.  Pure; runs inside the outer scan body."""
+    payload: Dict[str, jax.Array] = {
+        "step": jnp.asarray(state.step, jnp.int32)}
+    for name in obs_schema.DEVICE_TAP_KEYS:
+        spec = obs_schema.TAP[name]
+        if name == "step" or name not in metrics:
+            continue
+        col = metrics[name]
+        val = col.mean() if spec.agg == "mean" else col[-1]
+        payload[name] = jnp.asarray(val, spec.dtype)
+    if tap_meta:
+        for name, val in tap_meta.items():
+            payload[name] = jnp.asarray(val)
+    return obs_schema.validate_tap(payload, where="scan_trial.tap")
+
+
 def scan_trial(step_fn, state: TrainState, *, batch_fn, steps: int,
-               held_fn=None, trace_fields=None):
+               held_fn=None, trace_fields=None, tap_every: int = 0,
+               tap: Optional[Callable] = None, tap_meta=None):
     """Roll a whole training trial into one ``lax.scan``.
 
     ``step_fn`` must be the *unjitted* step (``make_train_step(...,
@@ -316,33 +350,78 @@ def scan_trial(step_fn, state: TrainState, *, batch_fn, steps: int,
     step does not emit raises :class:`ValueError` at trace time, naming
     both the offender and the available fields.
 
+    ``tap_every=K`` with a host callable ``tap`` streams a bounded
+    scalar summary of every K-step window (:func:`tap_payload`, typed by
+    ``repro.obs.schema.TAP``) through ``jax.experimental.io_callback``
+    — the live-telemetry layer (DESIGN.md §17).  The scan is then
+    nested: an outer scan over ``steps // K`` windows whose body is an
+    inner scan over K steps plus one unconditional callback.  The
+    nesting is what keeps the callback legal under the campaign
+    engine's vmap (``io_callback`` under ``vmap``-of-``cond`` is
+    unsupported) and changes **nothing** about the computation: the
+    step sequence, rng stream and stacked traces are bit-identical to
+    the flat scan (locked by tests/test_live.py).  ``steps`` must be a
+    multiple of K.  Under vmap the callback fires once per lane per
+    window with unbatched scalars and no lane identity — thread one
+    through ``tap_meta`` (a dict of traced scalars merged into every
+    payload, e.g. ``{"lane": knobs["lane"]}``).  ``tap_every=0``
+    (default) is byte-for-byte the untapped program.
+
     Returns ``(final_state, traces)`` with each trace leaf shaped
     ``(steps, ...)``.
     """
-    def body(st, t):
+    def body(st, t, _keep=trace_fields):
         batch = batch_fn(t)
         if held_fn is not None:
             st, metrics = step_fn(st, batch, held_fn(t))
         else:
             st, metrics = step_fn(st, batch)
-        if trace_fields is not None:
-            unknown = [k for k in trace_fields if k not in metrics]
-            if unknown:
-                raise ValueError(
-                    f"scan_trial: unknown trace field(s) {unknown}; this "
-                    f"step emits {sorted(metrics)}")
-            metrics = {k: metrics[k] for k in trace_fields}
-        return st, metrics
+        return st, _select_traces(metrics, _keep)
 
-    return jax.lax.scan(body, state, jnp.arange(steps))
+    if not tap_every:
+        return jax.lax.scan(body, state, jnp.arange(steps))
+
+    if tap is None:
+        raise ValueError("scan_trial: tap_every > 0 needs a host `tap` "
+                         "callable (see repro.obs.live.LiveCollector)")
+    K = int(tap_every)
+    if K < 0 or steps % K != 0:
+        raise ValueError(
+            f"scan_trial: steps ({steps}) must be a positive multiple of "
+            f"tap_every ({K}) — windows must tile the trial exactly so "
+            "the tapped step sequence is the untapped one")
+    from jax.experimental import io_callback
+
+    def window(st, ts):
+        # full metrics as inner ys (the payload may need keys outside
+        # trace_fields); filtered down before they reach the outer ys
+        st, mets = jax.lax.scan(lambda s, t: body(s, t, _keep=None),
+                                st, ts)
+        payload = tap_payload(mets, st, tap_meta)
+        io_callback(tap, None, payload)
+        return st, _select_traces(mets, trace_fields)
+
+    final, traces = jax.lax.scan(window, state,
+                                 jnp.arange(steps).reshape(steps // K, K))
+    traces = jax.tree.map(
+        lambda a: a.reshape((steps,) + tuple(a.shape[2:])), traces)
+    return final, traces
 
 
 class Trainer:
-    """Python-loop wrapper: data iterators, metrics history, eval hooks."""
+    """Python-loop wrapper: data iterators, metrics history, eval hooks.
+
+    Interactive logging goes through the same live-telemetry path as
+    campaign cells (``repro.obs.live.LiveCollector``, DESIGN.md §17):
+    at every ``log_every`` boundary the scalar record's tap-surface
+    subset becomes one heartbeat — ring-buffered, optionally persisted
+    (pass a ``collector`` with a ``heartbeat_dir``), and echoed to the
+    terminal when ``verbose``.  Scalar ``history`` is unchanged by any
+    of this."""
 
     def __init__(self, state: TrainState, step_fn, data_iter, *,
                  held_iter=None, eval_fn: Optional[Callable] = None,
-                 log_every: int = 50, name: str = "run"):
+                 log_every: int = 50, name: str = "run", collector=None):
         self.state = state
         self.step_fn = step_fn
         self.data_iter = data_iter
@@ -350,6 +429,7 @@ class Trainer:
         self.eval_fn = eval_fn
         self.log_every = log_every
         self.name = name
+        self.collector = collector
         self.history: list = []
         # non-scalar metrics are trace material, not history lines: they
         # accumulate here every step (as device arrays — no host sync)
@@ -365,6 +445,11 @@ class Trainer:
                 for k, vs in self.traces.items()}
 
     def run(self, steps: int, verbose: bool = True):
+        collector = self.collector
+        if collector is None and verbose:
+            from repro.obs import live as live_lib
+            collector = self.collector = live_lib.LiveCollector(
+                name=self.name, echo=print)
         t0 = time.time()
         for i in range(steps):
             batch = next(self.data_iter)
@@ -394,8 +479,10 @@ class Trainer:
                     rec.update(self.eval_fn(self.state.params))
                 rec["wall_s"] = time.time() - t0
                 self.history.append(rec)
-                if verbose:
-                    msg = " ".join(f"{k}={v:.4g}" for k, v in rec.items()
-                                   if k != "step")
-                    print(f"[{self.name}] step {rec['step']}: {msg}")
+                # one telemetry path for interactive runs and campaign
+                # cells: the record's tap-surface subset is a heartbeat
+                # (the collector stamps step_rate/t_wall and echoes it)
+                if collector is not None:
+                    collector.tap({k: v for k, v in rec.items()
+                                   if k in obs_schema.TAP})
         return self.history

@@ -1,0 +1,17 @@
+"""Known-bad fixture: the host-callback exemption must not leak.  The
+``tap`` body is host context (exempt, see fx_host_callback_good.py),
+but numpy on a traced value in the surrounding trace body — right next
+to the ``io_callback`` — still fires ``np-in-trace``."""
+import numpy as np
+from jax.experimental import io_callback
+
+
+def make_step():
+    def step_fn(state, batch):
+        def tap(payload):
+            return None
+
+        io_callback(tap, None, {"loss": state})
+        bad = np.sum(state)                # BAD: numpy on a tracer
+        return bad, batch
+    return step_fn

@@ -1,0 +1,21 @@
+"""Known-good fixture: host-callback exemption.  Functions handed to
+``jax.experimental.io_callback`` / ``jax.debug.callback`` execute on
+the HOST — numpy, ``float()`` and file-ish work on their arguments are
+legal there, and the analyzer must not flag them even though the
+callback is defined inside a trace body (the live-telemetry tap shape,
+DESIGN.md §17)."""
+import jax
+import numpy as np
+from jax.experimental import io_callback
+
+
+def make_step():
+    def step_fn(state, batch):
+        def tap(payload):
+            # OK: host context — np/float on callback arguments
+            return float(np.mean(payload["loss"]))
+
+        io_callback(tap, None, {"loss": state})
+        jax.debug.callback(lambda v: print(int(np.asarray(v))), state)
+        return state, batch
+    return step_fn

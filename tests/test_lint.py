@@ -29,6 +29,7 @@ TIER1_FIXTURES = {
     "fx_traced_branch.py": "traced-branch",
     "fx_host_cast.py": "host-cast",
     "fx_np_in_trace.py": "np-in-trace",
+    "fx_host_callback_bad.py": "np-in-trace",
     "fx_key_reuse.py": "key-reuse",
     "fx_knob_literal.py": "knob-literal",
     "fx_obs_key.py": "obs-key",
@@ -52,6 +53,25 @@ def test_fixture_triggers_exactly_its_rule(fixture, rule):
     violations = _run_tier1_passes(mod)
     assert violations, f"{fixture} must trigger {rule}"
     assert {v.rule for v in violations} == {rule}
+
+
+def test_host_callback_bodies_are_exempt():
+    """np / float() inside a function handed to io_callback /
+    jax.debug.callback is host-side work, not a trace violation."""
+    mod = ast_passes.load_modules(
+        ROOT, [FIXTURES / "fx_host_callback_good.py"])[0]
+    assert _run_tier1_passes(mod) == []
+
+
+def test_tap_surface_is_lint_registered():
+    """The obs-key closure covers the tap surface: every TAP key is
+    parsed from schema.py, and trainer.py's `payload` writes are
+    checked against it (HEAD-clean test would catch an unregistered
+    key; here we check the registry side directly)."""
+    registered = ast_passes.registered_obs_keys(ROOT)
+    from repro.obs import schema
+    assert registered["tap"] == set(schema.TAP)
+    assert "step" in registered["tap"]
 
 
 def test_fixture_report_format_is_file_line():
